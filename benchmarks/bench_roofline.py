@@ -1,0 +1,32 @@
+"""Roofline summary (ours): aggregates the dry-run artifacts into headline
+numbers per arch x shape (single pod), so `python -m benchmarks.run`
+reports the perf state without recompiling.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.common import emit_value
+from repro.analysis.report import load_records, roofline_row
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run() -> None:
+    if not ART.exists():
+        emit_value("roofline.missing", 0.0,
+                   "run: python -m repro.launch.dryrun --all --mesh both")
+        return
+    rows = [roofline_row(r) for r in load_records(ART, "single")]
+    for r in rows:
+        emit_value(f"roofline.{r['arch']}.{r['shape']}",
+                   r["roofline_fraction"],
+                   f"dom={r['dominant']} 6ND/HLO="
+                   f"{(r['useful_ratio'] or 0):.3f}")
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        best = max(rows, key=lambda r: r["roofline_fraction"])
+        emit_value("roofline.worst_fraction", worst["roofline_fraction"],
+                   f"{worst['arch']}/{worst['shape']}")
+        emit_value("roofline.best_fraction", best["roofline_fraction"],
+                   f"{best['arch']}/{best['shape']}")

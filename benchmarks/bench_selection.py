@@ -1,0 +1,82 @@
+"""Paper Fig. 10: model selection vs AutoML-style exhaustive evaluation —
+accuracy (regret), selection time, memory proxy; plus random baseline and
+the k/anchor ablations.
+"""
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+import numpy as np
+
+from benchmarks.common import emit, emit_value, timeit
+from repro.core import (ModelSelector, TaskFeaturizer, build_tasks,
+                        build_zoo, linear_probe_accuracy, selection_regret,
+                        transfer_matrix)
+from repro.core.zoo import Task
+
+
+def run() -> None:
+    zoo = build_zoo(24, seed=0)
+    hist = build_tasks(48, seed=1)
+    t0 = time.time()
+    V = transfer_matrix(zoo, hist)
+    emit("selection.offline_matrix_48x24", time.time() - t0,
+         "historical transfer evals (offline, one-time)")
+
+    fz = TaskFeaturizer()
+    feats = np.stack([fz.features(t.X, t.y) for t in hist])
+    sel = ModelSelector(k=6, n_anchors=4).fit_offline(V, feats, zoo=zoo)
+    emit("selection.offline_fit", sel.offline_seconds,
+         f"nmf_recon_err={sel.recon_error:.4f}")
+
+    targets = build_tasks(24, seed=99)
+    Vt = transfer_matrix(zoo, targets)
+
+    # MorphingDB-style online selection
+    regs, ranks, times = [], [], []
+    for j, t in enumerate(targets):
+        r = selection_regret(sel, Vt[:, j], t.X, t.y)
+        regs.append(r["regret"])
+        ranks.append(r["rank"])
+        times.append(r["online_ms"] / 1e3)
+    emit("selection.online_per_task", float(np.mean(times)),
+         f"regret={np.mean(regs):.4f} median_rank={np.median(ranks):.0f}/24")
+
+    # exhaustive (AutoML-style evaluate-every-model) baseline
+    def exhaustive(t: Task):
+        accs = [linear_probe_accuracy(m, t) for m in zoo]
+        return int(np.argmax(accs))
+
+    t_ex = timeit(lambda: [exhaustive(t) for t in targets[:6]]) / 6
+    ex_regret = float(np.mean(
+        [Vt[:, j].max() - Vt[exhaustive(t), j]
+         for j, t in enumerate(targets[:6])]))
+    emit("selection.exhaustive_per_task", t_ex,
+         f"regret={ex_regret:.4f} (oracle-ish, pays full eval)")
+    emit_value("selection.speedup_vs_exhaustive",
+               t_ex / max(np.mean(times), 1e-9), "x faster online")
+
+    # random baseline
+    rng = np.random.default_rng(7)
+    rand_regret = float(np.mean(
+        [Vt[:, j].max() - Vt[rng.integers(len(zoo)), j]
+         for j in range(len(targets))]))
+    emit_value("selection.regret_ours", float(np.mean(regs)), "")
+    emit_value("selection.regret_random", rand_regret, "")
+
+    # memory proxy (paper Fig 10 resource axis)
+    tracemalloc.start()
+    sel2 = ModelSelector(k=6, n_anchors=4).fit_offline(V, feats, zoo=zoo)
+    sel2.select(targets[0].X, targets[0].y)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    emit_value("selection.peak_mem_mb", peak / 1e6, "offline+online fit")
+
+    # ablation: subspace rank k
+    for k in (2, 6, 12):
+        s = ModelSelector(k=k, n_anchors=4, nmf_iters=300).fit_offline(
+            V, feats, zoo=zoo)
+        rr = float(np.mean([selection_regret(s, Vt[:, j], t.X, t.y)["regret"]
+                            for j, t in enumerate(targets)]))
+        emit_value(f"selection.ablation_k{k}", rr, "regret")

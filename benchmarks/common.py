@@ -1,0 +1,28 @@
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def emit_value(name: str, value: float, derived: str = "") -> None:
+    ROWS.append((name, value, derived))
+    print(f"{name},{value:.4f},{derived}")

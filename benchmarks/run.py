@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (values that are ratios or
+counts are emitted as plain values; see each module).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "bench_series",      # Fig 6
+    "bench_nlp",         # Fig 7
+    "bench_image",       # Fig 8
+    "bench_storage",     # Fig 9
+    "bench_selection",   # Fig 10
+    "bench_placement",   # Figs 11-12
+    "bench_batchsize",   # Table 3
+    "bench_sharing",     # Fig 13
+    "bench_roofline",    # ours: §Roofline summary
+]
+
+
+def main() -> int:
+    print("name,us_per_call,derived")
+    failed = []
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    for mod_name in MODULES:
+        if only and mod_name not in only:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            mod.run()
+        except Exception:
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

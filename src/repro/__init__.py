@@ -1,0 +1,3 @@
+"""repro: MorphingDB (task-centric AI-native DBMS) as a multi-pod JAX
+training/serving framework. See DESIGN.md and EXPERIMENTS.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,38 @@
+"""Fill the <!-- ROOFLINE_TABLE --> marker in EXPERIMENTS.md from the
+dry-run artifacts (single + multi-pod summary)."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+from repro.analysis.report import load_records, markdown_table, roofline_row
+
+ROOT = Path(__file__).resolve().parents[3]
+MARKER = "<!-- ROOFLINE_TABLE -->"
+
+
+def build_tables(art: Path) -> str:
+    single = [roofline_row(r) for r in load_records(art, "single")]
+    multi = [roofline_row(r) for r in load_records(art, "multi")]
+    out = ["### Single pod (16x16 = 256 chips)\n\n",
+           markdown_table(single), "\n",
+           "### Multi-pod (2x16x16 = 512 chips)\n\n",
+           markdown_table(multi)]
+    return "".join(out)
+
+
+def main() -> int:
+    art = ROOT / "artifacts" / "dryrun"
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text()
+    if MARKER not in text:
+        print("marker not found", file=sys.stderr)
+        return 1
+    table = build_tables(art)
+    exp.write_text(text.replace(MARKER, table))
+    print(f"filled roofline tables ({len(table)} chars)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,180 @@
+"""HLO analysis: collective byte accounting + roofline terms.
+
+``cost_analysis()`` gives FLOPs and bytes-accessed but NOT collective
+traffic; we parse the post-SPMD optimized HLO text, build a symbol table of
+instruction result sizes, and sum operand sizes for every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+including their -start async variants; -done variants are skipped to avoid
+double counting).
+
+Hardware model (TPU v5e, per brief):
+  peak 197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    op_counts: Dict[str, int] = field(default_factory=dict)
+    operand_bytes: Dict[str, int] = field(default_factory=dict)
+    result_bytes: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+    def to_dict(self) -> dict:
+        return {"op_counts": self.op_counts,
+                "operand_bytes": self.operand_bytes,
+                "result_bytes": self.result_bytes,
+                "total_operand_bytes": self.total_operand_bytes,
+                "total_result_bytes": self.total_result_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # symbol table: instruction name -> result bytes
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, type_str, _op = m.groups()
+            sizes[name] = shape_bytes(type_str)
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        stats.op_counts[base] = stats.op_counts.get(base, 0) + 1
+        stats.result_bytes[base] = (stats.result_bytes.get(base, 0)
+                                    + shape_bytes(type_str))
+        # operand names inside the parens of this call
+        paren = line[line.index("(") + 1:]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = paren[:end]
+        ob = 0
+        for am in re.finditer(r"%([\w.\-]+)", args):
+            ob += sizes.get(am.group(1), 0)
+        if ob == 0:  # operands may be typed inline without %-names
+            ob = shape_bytes(args)
+        stats.operand_bytes[base] = stats.operand_bytes.get(base, 0) + ob
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+# Effective link-cost weight per collective byte (ring schedules):
+#   all-reduce moves ~2x the payload; others ~1x.
+_COLL_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_operand_bytes: Dict[str, float]) -> dict:
+    """Three roofline terms in seconds (per the brief's formulas).
+
+    All inputs are per-device: FLOPs from the jaxpr counter (global/chips),
+    bytes + collective traffic from the loop-aware HLO analyzer on the
+    post-SPMD per-device module.
+    """
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    coll_bytes = sum(coll_operand_bytes.values())
+    weighted = sum(_COLL_WEIGHT.get(k, 1.0) * v
+                   for k, v in coll_operand_bytes.items())
+    collective_s = weighted / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "collective_bytes": coll_bytes,
+        "collective_bytes_weighted": weighted,
+        "dominant": dominant,
+    }
+
+
+def model_flops(cfg, shape, *, per_device: bool = True, chips: int = 256) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens.
+
+    Enc-dec archs split the seq budget (enc, dec) = (S/2, S/2) and only the
+    decoder runs at decode time, so N is apportioned per sub-stack.
+    """
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    if cfg.is_encoder_decoder:
+        # rough split: encoder layers vs decoder layers (+embed on decoder)
+        n_layers = cfg.num_layers + cfg.num_encoder_layers
+        n_enc = n * cfg.num_encoder_layers / n_layers
+        n_dec = n - n_enc
+        se = shape.seq_len - shape.seq_len // 2
+        sd = shape.seq_len // 2
+        if shape.kind == "decode":
+            total = mult * n_dec * shape.global_batch
+        else:
+            total = mult * (n_enc * se + n_dec * sd) * shape.global_batch
+    elif shape.kind == "decode":
+        total = mult * n * shape.global_batch
+    else:
+        total = mult * n * shape.global_batch * shape.seq_len
+    return total / chips if per_device else total

@@ -1,0 +1,452 @@
+"""Loop-aware cost extraction from optimized (post-SPMD) HLO text.
+
+XLA's ``cost_analysis()`` counts while-loop bodies once; real steps execute
+the layer scan ``num_layers`` times. This parser reconstructs per-device
+HBM bytes and collective traffic by walking the computation graph with
+while-loop trip counts extracted from loop condition computations
+(`compare(%iv, %constant(N)), direction=LT` -> N iterations).
+
+Bytes model (matches XLA's "bytes accessed" semantics): every top-level
+instruction contributes operands+result; fusion internals are free (they
+never touch HBM); while/conditional/call recurse.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_TYPE_RE = re.compile(r"([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)")
+_OP_RE = re.compile(r"\s*([\w\-]+)\((.*)$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota"}
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    args: str
+    line: str
+    is_root: bool = False
+
+
+def _parse_instr(raw: str) -> Optional["Instr"]:
+    """Parse one instruction line; robust to tuple types with
+    ``/*index=N*/`` comments and layout annotations."""
+    s = _COMMENT_RE.sub("", raw)
+    is_root = s.lstrip().startswith("ROOT")
+    nm = _NAME_RE.match(s)
+    if not nm:
+        return None
+    rest = s[nm.end():]
+    if rest.startswith("("):  # tuple result type: balanced-paren scan
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_str, tail = rest[:end + 1], rest[end + 1:]
+    else:
+        tm = _TYPE_RE.match(rest)
+        if not tm:
+            return None
+        type_str, tail = tm.group(1), rest[tm.end():]
+    om = _OP_RE.match(tail)
+    if not om:
+        return None
+    return Instr(nm.group(1), type_str, om.group(1), om.group(2), s, is_root)
+
+
+@dataclass
+class HloCost:
+    bytes_accessed: float = 0.0
+    # dtype-promotion round-trips the CPU pipeline inserts (f32 copies of
+    # bf16 weights/caches). The TPU MXU consumes bf16 natively, so these
+    # are charged separately and excluded from bytes_accessed (documented
+    # in EXPERIMENTS.md §Methodology).
+    bytes_cpu_dtype_artifacts: float = 0.0
+    dot_flops: float = 0.0
+    collective_operand_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_result_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    # raw (uncorrected) operand bytes: the CPU pipeline promotes bf16
+    # tensors to f32 before collectives; at jax level grads/activations are
+    # bf16 (verified in tests), so f32 collective payloads are charged at
+    # half size, with the raw figure kept here.
+    collective_operand_bytes_raw: Dict[str, float] = field(
+        default_factory=dict)
+    loop_trip_counts: List[int] = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_operand_bytes.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "bytes_cpu_dtype_artifacts": self.bytes_cpu_dtype_artifacts,
+            "bytes_accessed": self.bytes_accessed,
+            "dot_flops": self.dot_flops,
+            "collective_operand_bytes": self.collective_operand_bytes,
+            "collective_operand_bytes_raw": self.collective_operand_bytes_raw,
+            "collective_result_bytes": self.collective_result_bytes,
+            "collective_counts": self.collective_counts,
+            "total_collective_bytes": self.total_collective_bytes,
+            "loop_trip_counts": self.loop_trip_counts[:64],
+        }
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self.sizes: Dict[str, int] = {}
+        self.types: Dict[str, str] = {}
+        self._producers: Dict[str, Instr] = {}
+        for comp in self.computations.values():
+            for ins in comp:
+                self.sizes[ins.name] = shape_bytes(ins.type_str)
+                self.types[ins.name] = ins.type_str
+                self._producers[ins.name] = ins
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            m = _COMP_RE.match(raw)
+            if m and raw.rstrip().endswith("{"):
+                cur = m.group(1)
+                self.computations[cur] = []
+                if raw.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if raw.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            ins = _parse_instr(raw)
+            if ins:
+                self.computations[cur].append(ins)
+
+    # -- helpers -----------------------------------------------------------
+    def _operand_bytes(self, ins: Instr) -> int:
+        depth, end = 1, len(ins.args)
+        for i, ch in enumerate(ins.args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = ins.args[:end]
+        total = 0
+        seen = False
+        for am in re.finditer(r"%([\w.\-]+)", args):
+            total += self.sizes.get(am.group(1), 0)
+            seen = True
+        if not seen:
+            total = shape_bytes(args)
+        return total
+
+    def _called(self, ins: Instr, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w.\-]+)", ins.line)
+        return m.group(1) if m else None
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name, [])
+        # find constant feeding a LT/LE compare
+        consts: Dict[str, int] = {}
+        for ins in comp:
+            cm = re.match(r"constant\((\d+)\)", ins.op + "(" + ins.args)
+            if ins.op == "constant":
+                vm = re.search(r"constant\((\d+)\)", ins.line)
+                if vm:
+                    consts[ins.name] = int(vm.group(1))
+        # compare may live in a nested fusion computation
+        for ins in comp:
+            target = None
+            if ins.op == "compare":
+                target = ins
+            elif ins.op == "fusion":
+                called = self._called(ins, "calls")
+                if called and any(i.op == "compare"
+                                  for i in self.computations.get(called, [])):
+                    target = ins
+            if target is None:
+                continue
+            for am in re.finditer(r"%([\w.\-]+)", target.args):
+                if am.group(1) in consts:
+                    return max(1, consts[am.group(1)])
+        # fall back: constants anywhere in the condition
+        if consts:
+            return max(1, max(consts.values()))
+        return 1
+
+    def _collective_corrected_bytes(self, ins: Instr, raw: float) -> float:
+        """Charge f32 collective payloads at bf16 size (the jax-level dtype
+        of grads/activations; CPU promotes them to f32 — see to_dict)."""
+        f32b = 0
+        total = 0
+        for name in self._operand_names(ins):
+            sz = self.sizes.get(name, 0)
+            total += sz
+            # operand dtype from its producing instruction's type string
+            prod = self._producer_type(name)
+            if prod and prod.startswith(("f32", "f64", "(f32")):
+                f32b += sz
+        if total == 0:
+            # operands typed inline
+            f32b = raw if "f32[" in ins.args.split(")")[0] else 0
+            total = raw
+        return raw - 0.5 * f32b * (raw / total if total else 1.0)
+
+    def _producer_type(self, name: str) -> Optional[str]:
+        return self.types.get(name)
+
+    def _operand_names(self, ins: Instr) -> List[str]:
+        depth, end = 1, len(ins.args)
+        for i, ch in enumerate(ins.args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return re.findall(r"%([\w.\-]+)", ins.args[:end])
+
+    # pure dtype/layout-change fusions: the TPU pipeline consumes bf16 and
+    # arbitrary dot layouts natively (no materialized converts/transposes)
+    _CONVERT_ONLY = {"convert", "reduce-precision", "parameter", "constant",
+                     "bitcast", "copy", "transpose"}
+
+    def _instr_bytes(self, ins: Instr) -> Tuple[float, float]:
+        """(HBM traffic, CPU-dtype-artifact traffic) for one instruction.
+
+        dynamic-slice reads only the slice (result size); a root
+        dynamic-update-slice writes only the update region (read+write of
+        the slice); fusions look through to their parameters' access
+        patterns (a param consumed only by dynamic-slice/gather is charged
+        at the sliced size), matching XLA bytes-accessed semantics.
+
+        TPU dtype model: the CPU pipeline promotes bf16 operands to f32
+        (whole-buffer convert round-trips); the MXU consumes bf16 natively,
+        so convert-only fusions are charged as artifacts, and a fusion whose
+        root converts a dynamic-update-slice is charged as the DUS.
+        """
+        if ins.op == "dynamic-slice":
+            return 2.0 * shape_bytes(ins.type_str), 0.0
+        if ins.op == "dynamic-update-slice":
+            ops = self._operand_names(ins)
+            upd = self.sizes.get(ops[1], 0) if len(ops) > 1 else 0
+            return 3.0 * upd, 0.0  # read region + read update + write region
+        if ins.op == "fusion":
+            called = self._called(ins, "calls")
+            comp = self.computations.get(called or "", [])
+            if not comp:
+                return (self._operand_bytes(ins)
+                        + shape_bytes(ins.type_str)), 0.0
+            by_name = {i.name: i for i in comp}
+            uses: Dict[str, List[Instr]] = {}
+            for i2 in comp:
+                for ref in self._operand_names(i2):
+                    uses.setdefault(ref, []).append(i2)
+            ops_inside = {i2.op for i2 in comp}
+            root = next((i2 for i2 in comp if i2.is_root), comp[-1])
+            # pure dtype-conversion fusion: free on TPU, tracked as artifact
+            if ops_inside <= self._CONVERT_ONLY:
+                art = self._operand_bytes(ins) + shape_bytes(ins.type_str)
+                return 0.0, art
+            total = 0.0
+            art = 0.0
+            for i2 in comp:
+                if i2.op != "parameter":
+                    continue
+                u = uses.get(i2.name, [])
+                if u and all(x.op in ("dynamic-slice", "gather") for x in u):
+                    total += sum(shape_bytes(x.type_str) for x in u)
+                else:
+                    total += shape_bytes(i2.type_str)
+            # a convert-wrapped DUS root is the DUS (dtype roundtrip = CPU
+            # artifact; on TPU the buffer stays bf16 and updates in place)
+            dus = root
+            if root.op == "convert":
+                rops = self._operand_names(root)
+                if rops and rops[0] in by_name \
+                        and by_name[rops[0]].op == "dynamic-update-slice":
+                    art += shape_bytes(root.type_str) * 2.0
+                    dus = by_name[rops[0]]
+            if dus.op == "dynamic-update-slice":
+                ops = self._operand_names(dus)
+                upd_t = (by_name[ops[1]].type_str if len(ops) > 1
+                         and ops[1] in by_name else "")
+                ub = shape_bytes(upd_t) if upd_t else shape_bytes(dus.type_str)
+                # subtract the pass-through buffer param (aliased in place)
+                if ops and ops[0] in by_name \
+                        and by_name[ops[0]].op == "parameter":
+                    total -= shape_bytes(by_name[ops[0]].type_str)
+                else:
+                    # buffer came through converts: drop the biggest param
+                    big = max((shape_bytes(i2.type_str) for i2 in comp
+                               if i2.op == "parameter"), default=0)
+                    total -= big
+                total += 2.0 * ub
+            else:
+                total += shape_bytes(root.type_str)
+            return max(total, 0.0), art
+        return (self._operand_bytes(ins) + shape_bytes(ins.type_str)), 0.0
+
+    def _dot_bytes(self, ins: Instr) -> Tuple[float, float]:
+        """Dot traffic with jax-level operand dtypes: operands reached via
+        convert/transpose-only fusions are charged at the fusion's *input*
+        (bf16) size — the MXU reads bf16 weights directly."""
+        total = 0.0
+        art = 0.0
+        for name in self._operand_names(ins):
+            sz = self.sizes.get(name, 0)
+            prod = self._producers.get(name)
+            if prod is not None and prod.op == "fusion":
+                called = self._called(prod, "calls")
+                comp = self.computations.get(called or "", [])
+                if comp and {i.op for i in comp} <= self._CONVERT_ONLY:
+                    inp = sum(shape_bytes(i.type_str) for i in comp
+                              if i.op == "parameter")
+                    art += max(0.0, sz - inp)
+                    sz = min(sz, inp)
+            elif prod is not None and prod.op == "convert":
+                srcs = self._operand_names(prod)
+                inp = sum(self.sizes.get(s, 0) for s in srcs)
+                if 0 < inp < sz:
+                    art += sz - inp
+                    sz = inp
+            total += sz
+        return total + shape_bytes(ins.type_str), art
+
+    def _dot_flops(self, ins: Instr) -> float:
+        # result elements x contracted size x 2
+        out_elems = 0
+        for m in _SHAPE_RE.finditer(ins.type_str):
+            n = 1
+            dims = m.group(2)
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            out_elems += n
+        lcm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        lhs_name = re.search(r"%([\w.\-]+)", ins.args)
+        K = 1
+        if lcm and lhs_name:
+            # reconstruct lhs dims from the defining instruction
+            lhs_ins = None
+            for comp in self.computations.values():
+                for i2 in comp:
+                    if i2.name == lhs_name.group(1):
+                        lhs_ins = i2
+                        break
+            if lhs_ins is not None:
+                sm = _SHAPE_RE.search(lhs_ins.type_str)
+                if sm and sm.group(2):
+                    dims = [int(d) for d in sm.group(2).split(",")]
+                    for idx in (lcm.group(1).split(",")
+                                if lcm.group(1) else []):
+                        K *= dims[int(idx)]
+        return 2.0 * out_elems * K
+
+    # -- main walk ----------------------------------------------------------
+    def cost(self, comp_name: Optional[str] = None,
+             mult: float = 1.0, acc: Optional[HloCost] = None) -> HloCost:
+        acc = acc if acc is not None else HloCost()
+        comp = self.computations.get(comp_name or self.entry or "", [])
+        for ins in comp:
+            if ins.op in _FREE_OPS:
+                continue
+            if ins.op == "while":
+                body = self._called(ins, "body")
+                cond = self._called(ins, "condition")
+                trips = self._trip_count(cond) if cond else 1
+                acc.loop_trip_counts.append(trips)
+                if body:
+                    self.cost(body, mult * trips, acc)
+                continue
+            if ins.op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    c = self._called(ins, key)
+                    if c:
+                        self.cost(c, mult, acc)
+                continue
+            if ins.op in ("call", "async-start"):
+                c = self._called(ins, "to_apply") or self._called(ins, "calls")
+                if c:
+                    self.cost(c, mult, acc)
+                continue
+            base = None
+            for cname in _COLLECTIVES:
+                if ins.op == cname or ins.op == cname + "-start":
+                    base = cname
+                    break
+            if base:
+                raw = self._operand_bytes(ins)
+                corrected = self._collective_corrected_bytes(ins, raw)
+                acc.collective_operand_bytes[base] = (
+                    acc.collective_operand_bytes.get(base, 0.0)
+                    + corrected * mult)
+                acc.collective_operand_bytes_raw[base] = (
+                    acc.collective_operand_bytes_raw.get(base, 0.0)
+                    + raw * mult)
+                acc.collective_result_bytes[base] = (
+                    acc.collective_result_bytes.get(base, 0.0)
+                    + shape_bytes(ins.type_str) * mult)
+                acc.collective_counts[base] = (
+                    acc.collective_counts.get(base, 0.0) + mult)
+                acc.bytes_accessed += 2.0 * corrected * mult
+                continue
+            if ins.op.endswith("-done"):
+                continue
+            if ins.op == "dot":
+                acc.dot_flops += self._dot_flops(ins) * mult
+                b, art = self._dot_bytes(ins)
+            else:
+                b, art = self._instr_bytes(ins)
+            acc.bytes_accessed += b * mult
+            acc.bytes_cpu_dtype_artifacts += art * mult
+        return acc
+
+
+def analyze_hlo(text: str) -> HloCost:
+    return HloModule(text).cost()

@@ -1,0 +1,82 @@
+"""Exact matmul-FLOP counting from jaxprs.
+
+``compiled.cost_analysis()`` counts while-loop bodies once and sees the CPU
+backend's *decomposed* ragged_dot (dense over groups), so it is unusable for
+roofline math on scanned/MoE models. The jaxpr is the ground truth for the
+math actually specified: scan lengths are static, ragged_dot is 2*m*k*n,
+and shard_map bodies are per-shard (multiplied back by mesh size).
+
+Counted: dot_general, ragged_dot[_general]. Elementwise/transcendental ops
+are excluded (<1% of LLM step FLOPs; documented in EXPERIMENTS.md).
+Returns GLOBAL flops; divide by chip count for the ideal-parallel
+per-device figure (replicated-compute caveats documented per arch).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _dot_general_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval.shape, eqn.invars[1].aval.shape
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    K = _prod(lhs[i] for i in lc)
+    B = _prod(lhs[i] for i in lb)
+    M = _prod(lhs[i] for i in range(len(lhs)) if i not in set(lc) | set(lb))
+    N = _prod(rhs[i] for i in range(len(rhs)) if i not in set(rc) | set(rb))
+    return 2.0 * B * M * N * K
+
+
+def _ragged_dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval.shape, eqn.invars[1].aval.shape
+    # simple form: lhs [m,k], rhs [g,k,n] -> each lhs row hits one group
+    m, k = lhs[0], lhs[1]
+    n = rhs[-1]
+    return 2.0 * m * k * n
+
+
+def count_flops(jaxpr, mult: float = 1.0) -> float:
+    """Recursively count matmul FLOPs of a (Closed)Jaxpr."""
+    if hasattr(jaxpr, "jaxpr"):  # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += mult * _dot_general_flops(eqn)
+        elif prim in ("ragged_dot", "ragged_dot_general"):
+            total += mult * _ragged_dot_flops(eqn)
+        elif prim == "scan":
+            total += count_flops(eqn.params["jaxpr"],
+                                 mult * eqn.params["length"])
+        elif prim == "while":
+            # we never emit raw while; count body once (conservative)
+            total += count_flops(eqn.params["body_jaxpr"], mult)
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            total += max(count_flops(b, mult) for b in branches)
+        elif prim == "shard_map":
+            mesh = eqn.params.get("mesh")
+            size = getattr(mesh, "size", 1)
+            total += count_flops(eqn.params["jaxpr"], mult * size)
+        else:
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                if key in eqn.params:
+                    total += count_flops(eqn.params[key], mult)
+                    break
+    return total
+
+
+def flops_of(fn, *abstract_args) -> float:
+    jaxpr = jax.make_jaxpr(fn)(*abstract_args)
+    return count_flops(jaxpr)

@@ -1,0 +1,22 @@
+"""The paper's primary contribution: task-centric model selection
+(NMF transferability subspace + online projection), the task registry,
+and the mini zoo/transfer substrate used to validate it.
+"""
+from repro.core.features import TaskFeaturizer
+from repro.core.forest import (DecisionTreeRegressor, RandomForestRegressor,
+                               RidgeRegressor)
+from repro.core.nmf import NMFResult, nmf, reconstruction_error
+from repro.core.selection import (ModelSelector, SelectionReport,
+                                  selection_regret)
+from repro.core.task import TaskRegistry, TaskSpec
+from repro.core.zoo import (FAMILIES, Task, ZooModel, build_tasks, build_zoo,
+                            linear_probe_accuracy, make_task, pretrain_model,
+                            transfer_matrix)
+
+__all__ = [
+    "TaskFeaturizer", "DecisionTreeRegressor", "RandomForestRegressor",
+    "RidgeRegressor", "NMFResult", "nmf", "reconstruction_error",
+    "ModelSelector", "SelectionReport", "selection_regret", "TaskRegistry",
+    "TaskSpec", "FAMILIES", "Task", "ZooModel", "build_tasks", "build_zoo",
+    "linear_probe_accuracy", "make_task", "pretrain_model", "transfer_matrix",
+]

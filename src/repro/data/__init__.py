@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, FileShardedCorpus, SyntheticCorpus
+
+__all__ = ["DataConfig", "FileShardedCorpus", "SyntheticCorpus"]

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    axis_rules,
+    lshard,
+    make_rules,
+    named_sharding,
+    rules_for_config,
+    to_pspec,
+    tree_pspecs,
+    tree_shardings,
+)
+
+__all__ = [
+    "axis_rules", "lshard", "make_rules", "named_sharding",
+    "rules_for_config", "to_pspec", "tree_pspecs", "tree_shardings",
+]

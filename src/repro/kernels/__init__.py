@@ -1,0 +1,4 @@
+from repro.kernels.ops import (decode_attention, flash_attention,
+                               fused_embed, rmsnorm)
+
+__all__ = ["decode_attention", "flash_attention", "fused_embed", "rmsnorm"]

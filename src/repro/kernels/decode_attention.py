@@ -1,0 +1,92 @@
+"""Pallas TPU flash-decode: one-token attention against a long KV cache.
+
+Grid: (batch, kv_block) — kv_block sequential, scratch carries the online
+softmax state. All Q heads for the batch element live in VMEM (Hq x D is
+small); kv tiles stream through. Positions >= ``length`` are masked (the
+cache may be longer than the valid prefix).
+VMEM working set: Hq*D (q) + 2*bk*Hkv*D (kv tile) + Hq*bk (scores).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            bk: int, nk: int, G: int, scale: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # [Hq, D]
+    k = k_ref[0].astype(jnp.float32)                    # [Hkv, bk, D]
+    v = v_ref[0].astype(jnp.float32)
+    Hkv = k.shape[0]
+    Hq, D = q.shape
+    qg = q.reshape(Hkv, G, D)
+    s = jnp.einsum("kgd,ksd->kgs", qg, k)               # [Hkv, G, bk]
+    pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (Hkv, G, bk), 2)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+    m_prev = m_sc[...]
+    s2 = s.reshape(Hq, bk)
+    m_new = jnp.maximum(m_prev, s2.max(axis=1))
+    p = jnp.exp(s2 - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * corr + p.sum(axis=1)
+    pv = jnp.einsum("kgs,ksd->kgd", p.reshape(Hkv, G, bk), v)
+    acc_sc[...] = acc_sc[...] * corr[:, None] + pv.reshape(Hq, D)
+    m_sc[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, *,
+                     block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, D]; caches: [B, Hkv, S, D]; length: [B] valid prefix."""
+    B, Hq, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    bk = min(block_k, S)
+    assert S % bk == 0
+    nk = S // bk
+    grid = (B, nk)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+
+    kernel = functools.partial(_kernel, bk=bk, nk=nk, G=G, scale=D ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, Hq, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, Hkv, bk, D), lambda b, j: (b, 0, j, 0)),
+            pl.BlockSpec((1, Hkv, bk, D), lambda b, j: (b, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(length, q, k_cache, v_cache)

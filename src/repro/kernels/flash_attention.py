@@ -1,0 +1,123 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA-aware).
+
+Grid: (batch, q_head, q_block, kv_block) — the last axis is sequential on
+TPU, so VMEM scratch (running max / denominator / accumulator) persists
+across kv blocks for a fixed q block (the online-softmax recurrence).
+GQA: the k/v BlockSpec index maps fold q_head -> kv_head = qh * Hkv // Hq,
+so kv tiles are fetched once per group without materializing repeats.
+
+Block shapes are MXU-aligned (multiples of (128, 128) tiles on the
+(seq, head_dim) axes); the q tile, one kv tile, and the f32 accumulator
+bound the VMEM working set to
+  bq*D + 2*bk*D + bq*bk + 2*bq*D(f32) floats,
+e.g. 512x128 q / 512x128 kv tiles => ~1.3 MB << 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            causal: bool, window: Optional[int], bq: int, bk: int,
+            nk: int, scale: float):
+    i = pl.program_id(2)   # q block
+    j = pl.program_id(3)   # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_lo = i * bq
+    k_lo = j * bk
+
+    # block-level reachability (compute skipped entirely when masked out)
+    reachable = True
+    if causal:
+        reachable = k_lo <= q_lo + bq - 1
+    if window is not None:
+        reachable = jnp.logical_and(
+            reachable, k_lo + bk - 1 > q_lo - window) \
+            if causal else (k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(reachable if not isinstance(reachable, bool) else True)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                          # [bq, bk]
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + p.sum(axis=1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + p @ v
+        m_sc[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_sc[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_sc[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, S, D]; k/v: [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    grid = (B, Hq, nq, nk)
+
+    def q_map(b, h, i, j):
+        return (b, h, i, 0)
+
+    def kv_map(b, h, i, j):
+        return (b, (h * Hkv) // Hq, j, 0)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, bq=bq, bk=bk, nk=nk,
+        scale=D ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), q_map),
+            pl.BlockSpec((1, 1, bk, D), kv_map),
+            pl.BlockSpec((1, 1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

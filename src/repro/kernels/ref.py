@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Sk, D] -> [B, Hq, Sq, D]."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length) -> jax.Array:
+    """q: [B, Hq, D]; caches: [B, Hkv, S, D]; attends to pos < length."""
+    B, Hq, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bksd->bkgs", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S) < length
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6) -> jax.Array:
+    """x: [N, D]; w: [D] (1+w scaling)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def fused_embed_ref(x, w, mean: float = 0.0, scale: float = 1.0) -> jax.Array:
+    """Normalize+project+tanh: x [N, D], w [D, K] -> [N, K]."""
+    z = (x.astype(jnp.float32) - mean) * scale
+    return jnp.tanh(z @ w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,3 @@
+from repro.models.api import batch_axes, build_model, input_specs, make_batch
+
+__all__ = ["batch_axes", "build_model", "input_specs", "make_batch"]

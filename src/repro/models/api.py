@@ -1,0 +1,57 @@
+"""Unified model construction + batch/input specs for every assigned arch."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import LM
+
+
+def build_model(cfg: ModelConfig, attn_impl: str = "chunked"):
+    if cfg.is_encoder_decoder:
+        return EncDecModel(cfg, attn_impl=attn_impl)
+    return LM(cfg, attn_impl=attn_impl)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, rng=None,
+               batch_override: int = 0) -> Dict[str, Any]:
+    """Concrete random batch (smoke tests / examples)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    if cfg.is_encoder_decoder:
+        r1, r2 = jax.random.split(rng)
+        se, sd = S - S // 2, S // 2
+        return {
+            "frames": jax.random.normal(r1, (B, se, cfg.d_model), jnp.float32)
+            .astype(jnp.dtype(cfg.dtype)),
+            "tokens": jax.random.randint(r2, (B, sd), 0, cfg.vocab_size),
+        }
+    return {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: int = 0) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    if cfg.is_encoder_decoder:
+        se, sd = S - S // 2, S // 2
+        return {
+            "frames": jax.ShapeDtypeStruct((B, se, cfg.d_model),
+                                           jnp.dtype(cfg.dtype)),
+            "tokens": jax.ShapeDtypeStruct((B, sd), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def batch_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Logical axes for batch pytrees (tokens/frames sharded on batch)."""
+    if cfg.is_encoder_decoder:
+        return {"frames": ("batch", "seq", "act_embed"),
+                "tokens": ("batch", "seq")}
+    return {"tokens": ("batch", "seq")}

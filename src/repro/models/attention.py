@@ -1,0 +1,314 @@
+"""Attention: GQA projections, chunked flash-style training attention,
+and single-token decode attention over (full / windowed) KV caches.
+
+The chunked path is the dry-run / XLA implementation: a static python loop
+over Q chunks with a `lax.scan` over exactly the KV chunks each Q chunk can
+see (causal triangle and/or sliding window), so HLO FLOPs match the true
+work (no masked-away compute except the diagonal chunk). The Pallas kernel
+in `repro.kernels.flash_attention` is the TPU-target version of the same
+algorithm; `ref.py` oracles both.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models.layers import apply_rope
+from repro.models.spec import P
+
+NEG_INF = -2.0 ** 30
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    s = {
+        "wq": P((d, cfg.num_heads, hd), ("embed", "q_heads", "head_dim")),
+        "wk": P((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((cfg.num_heads, hd, d), ("q_heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = P((hd,), ("head_dim",), init="zeros")
+        s["k_norm"] = P((hd,), ("head_dim",), init="zeros")
+    return s
+
+
+def _qk_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention over chunks
+# ---------------------------------------------------------------------------
+
+def _scores(q, k, softcap):
+    # q: [B, Sq, K, G, D]; k: [B, Sk, K, D] -> [B, K, G, Sq, Sk]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def naive_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    q_offset: int = 0) -> jax.Array:
+    """Reference attention; q: [B,Sq,Hq,D], k/v: [B,Sk,Hkv,D]."""
+    B, Sq, Hq, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = Hq // K
+    q = q.reshape(B, Sq, K, G, D) * (D ** -0.5)
+    s = _scores(q, k, softcap)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention, FLOP-exact for causal/windowed.
+
+    Static python loop over Q chunks; each runs a scan over exactly the KV
+    chunks it can see. Memory per step: [B, K, G, q_chunk, kv_chunk].
+    """
+    B, S, Hq, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = Hq // K
+    if S % q_chunk:  # adapt chunks to ragged lengths
+        q_chunk = _largest_divisor(S, q_chunk)
+    if Sk % kv_chunk:
+        kv_chunk = _largest_divisor(Sk, kv_chunk)
+    if causal and S != Sk:
+        raise ValueError("causal chunked attention needs Sq == Sk")
+    if S <= q_chunk or q_chunk < 64 or kv_chunk < 64:
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    nq, nk = S // q_chunk, Sk // kv_chunk
+    scale = D ** -0.5
+    qc = q.reshape(B, nq, q_chunk, K, G, D)
+    kc = k.reshape(B, nk, kv_chunk, K, D)
+    vc = v.reshape(B, nk, kv_chunk, K, D)
+
+    outs = []
+    for i in range(nq):
+        q_i = qc[:, i].astype(jnp.float32) * scale  # [B,Cq,K,G,D]
+        q_lo, q_hi = i * q_chunk, (i + 1) * q_chunk - 1
+        j_hi = (q_hi // kv_chunk) if causal else (nk - 1)
+        j_lo = 0
+        if window is not None:
+            j_lo = max(0, (q_lo - window + 1) // kv_chunk)
+        ks = kc[:, j_lo:j_hi + 1]
+        vs = vc[:, j_lo:j_hi + 1]
+        njs = j_hi - j_lo + 1
+
+        def step(carry, xs):
+            m, l, acc = carry
+            kj, vj, j = xs
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_i, kj.astype(jnp.float32))
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            qpos = q_lo + jnp.arange(q_chunk)
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, D), jnp.float32)
+        js = jnp.arange(j_lo, j_hi + 1)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), js))
+        out_i = acc / jnp.maximum(l[..., None], 1e-30)      # [B,K,G,Cq,D]
+        outs.append(jnp.moveaxis(out_i, 3, 1))               # [B,Cq,K,G,D]
+    out = jnp.concatenate(outs, axis=1).reshape(B, S, Hq, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Full or windowed (circular) KV cache for one attention layer-stack.
+
+    k/v: [L, B, W, Hkv, D]; index: scalar int32 — next absolute position.
+    W == max_len for full caches, == window for circular caches.
+    """
+    k: jax.Array
+    v: jax.Array
+    index: jax.Array
+
+    @property
+    def window(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(cfg, layers: int, batch: int, max_len: int,
+                  window: Optional[int] = None,
+                  dtype=jnp.bfloat16) -> KVCache:
+    W = min(window, max_len) if window else max_len
+    shape = (layers, batch, W, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def cache_axes(_cfg) -> KVCache:
+    ax = ("layers", "batch", "cache_seq", "act_kv_heads", "head_dim")
+    return KVCache(ax, ax, ())
+
+
+# §Perf baseline reproduction: the naive decode upcasts the whole cache to
+# f32 (materializing an f32 copy per step). Toggled by the dry-run's
+# 'baseline' variant only.
+_DECODE_F32_UPCAST = False
+
+
+def set_decode_f32_upcast(flag: bool) -> None:
+    global _DECODE_F32_UPCAST
+    _DECODE_F32_UPCAST = flag
+
+
+def decode_attention(q, k_cache, v_cache, index, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None) -> jax.Array:
+    """One-token attention. q: [B,1,Hq,D]; caches: [B,W,Hkv,D].
+
+    ``index`` is the absolute position of the new token; cache slot layout
+    is circular when ``window`` is set (slot = pos % W), linear otherwise.
+    """
+    B, _, Hq, D = q.shape
+    W, K = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // K
+    if _DECODE_F32_UPCAST:  # baseline variant
+        qf = q.reshape(B, K, G, D).astype(jnp.float32) * (D ** -0.5)
+        s = jnp.einsum("bkgd,bskd->bkgs", qf,
+                       k_cache.astype(jnp.float32))
+    else:
+        qf = (q.reshape(B, K, G, D) * (D ** -0.5)).astype(k_cache.dtype)
+        # keep cache operands in their storage dtype; accumulate in f32 on
+        # the MXU (preferred_element_type) — upcasting the cache would
+        # materialize an f32 copy of the entire [L,B,S,K,D] buffer per step.
+        s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache,
+                       preferred_element_type=jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    slots = jnp.arange(W)
+    if window is None:
+        valid = slots <= index
+    else:
+        pos_of_slot = index - ((index - slots) % W)  # absolute pos in slot
+        valid = (pos_of_slot >= 0) & (pos_of_slot > index - W) & (pos_of_slot <= index)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if _DECODE_F32_UPCAST:  # baseline variant
+        out = jnp.einsum("bkgs,bskd->bkgd", p,
+                         v_cache.astype(jnp.float32))
+    else:
+        out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+def attn_apply(cfg, p: dict, x: jax.Array, *, positions: jax.Array,
+               causal: bool = True, window: Optional[int] = None,
+               impl: str = "chunked",
+               kv_for_cache: bool = False):
+    """Multi-head GQA attention over a full sequence.
+
+    Returns (out, (k, v)) — roped k and raw v for cache seeding when
+    ``kv_for_cache``.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:  # rope; None for non-positional (cross-attn)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = lshard(q, "batch", "seq", "act_heads", None)
+    k = lshard(k, "batch", "seq", "act_kv_heads", None)
+    v = lshard(v, "batch", "seq", "act_kv_heads", None)
+    if impl == "naive":
+        o = naive_attention(q, k, v, causal=causal, window=window,
+                            softcap=cfg.attn_logit_softcap)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              softcap=cfg.attn_logit_softcap)
+    o = lshard(o, "batch", "seq", "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    out = lshard(out, "batch", "seq", "act_embed")
+    if kv_for_cache:
+        return out, (k, v)
+    return out, None
+
+
+def attn_decode_apply(cfg, p: dict, x: jax.Array, k_cache, v_cache,
+                      index: jax.Array, *, window: Optional[int] = None):
+    """One-token attention step. x: [B,1,D]; caches [B,W,Hkv,D].
+
+    Returns (out, new_k_cache, new_v_cache).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    pos = index[None] if index.ndim == 0 else index
+    q = apply_rope(q, jnp.broadcast_to(pos, (x.shape[0], 1)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(pos, (x.shape[0], 1)), cfg.rope_theta)
+    W = k_cache.shape[1]
+    slot = index % W if window is not None else index
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    o = decode_attention(q, k_cache, v_cache, index, window=window,
+                         softcap=cfg.attn_logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    return out, k_cache, v_cache

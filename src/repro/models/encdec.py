@@ -1,0 +1,213 @@
+"""Encoder-decoder backbone (Whisper-medium). Conv frontend is a STUB:
+the encoder consumes precomputed frame embeddings [B, S_enc, D] from
+``input_specs()``. Decoder = causal self-attn + cross-attn + gated MLP.
+Assigned seq_len is the total context budget, split (enc, dec) = (S/2, S/2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.spec import P, abstract_params, axes_tree, init_params, stack_tree
+
+
+class EncDecState(NamedTuple):
+    self_kv: attn.KVCache          # [L_dec, B, S_dec_max, Hkv, hd]
+    cross_k: jax.Array             # [L_dec, B, S_enc, Hkv, hd]
+    cross_v: jax.Array
+    index: jax.Array
+
+
+def _remat(cfg, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+class EncDecModel:
+    def __init__(self, cfg, attn_impl: str = "chunked"):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+
+    # ------------------------------------------------------------------
+    def _enc_layer_specs(self) -> dict:
+        cfg = self.cfg
+        return {"norm1": L.norm_spec(cfg, cfg.d_model),
+                "attn": attn.attn_specs(cfg),
+                "norm2": L.norm_spec(cfg, cfg.d_model),
+                "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff)}
+
+    def _dec_layer_specs(self) -> dict:
+        cfg = self.cfg
+        return {"norm1": L.norm_spec(cfg, cfg.d_model),
+                "self_attn": attn.attn_specs(cfg),
+                "norm_x": L.norm_spec(cfg, cfg.d_model),
+                "cross_attn": attn.attn_specs(cfg),
+                "norm2": L.norm_spec(cfg, cfg.d_model),
+                "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff)}
+
+    def specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": L.embed_specs(cfg),
+            "enc_proj": P((cfg.d_model, cfg.d_model), ("embed", "act_embed")),
+            "enc_layers": stack_tree(self._enc_layer_specs(),
+                                     cfg.num_encoder_layers),
+            "enc_norm": L.norm_spec(cfg, cfg.d_model),
+            "dec_layers": stack_tree(self._dec_layer_specs(), cfg.num_layers),
+            "final_norm": L.norm_spec(cfg, cfg.d_model),
+        }
+
+    def init(self, rng):
+        return init_params(self.specs(), rng, self.cfg.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.specs(), self.cfg.param_dtype)
+
+    def param_axes(self):
+        return axes_tree(self.specs())
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = jnp.einsum("bsd,de->bse", frames.astype(dt),
+                       params["enc_proj"].astype(dt))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, pl):
+            h = L.norm_apply(cfg, x, pl["norm1"])
+            o, _ = attn.attn_apply(cfg, pl["attn"], h, positions=positions,
+                                   causal=False, impl=self.attn_impl)
+            x = x + o
+            h2 = L.norm_apply(cfg, x, pl["norm2"])
+            return x + L.mlp_apply(cfg, pl["mlp"], h2), None
+
+        x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_layers"])
+        return L.norm_apply(cfg, x, params["enc_norm"])
+
+    def _decode_trunk(self, params, tokens, enc_out, *, collect: bool):
+        cfg = self.cfg
+        x = L.embed_tokens(cfg, params["embed"], tokens)
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, pl):
+            h = L.norm_apply(cfg, x, pl["norm1"])
+            o, kv = attn.attn_apply(cfg, pl["self_attn"], h,
+                                    positions=positions, causal=True,
+                                    impl=self.attn_impl,
+                                    kv_for_cache=collect)
+            x = x + o
+            hx = L.norm_apply(cfg, x, pl["norm_x"])
+            o2, ckv = self._cross(pl["cross_attn"], hx, enc_out,
+                                  collect=collect)
+            x = x + o2
+            h2 = L.norm_apply(cfg, x, pl["norm2"])
+            x = x + L.mlp_apply(cfg, pl["mlp"], h2)
+            return x, (kv, ckv)
+
+        x, caches = jax.lax.scan(_remat(cfg, body), x, params["dec_layers"])
+        x = L.norm_apply(cfg, x, params["final_norm"])
+        return x, caches
+
+    def _cross(self, p, xq, enc_out, *, collect: bool):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+        o = attn.chunked_attention(q, k, v, causal=False) \
+            if self.attn_impl != "naive" else \
+            attn.naive_attention(q, k, v, causal=False)
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+        return out, ((k, v) if collect else None)
+
+    # ------------------------------------------------------------------
+    def apply(self, params, batch: Dict[str, jax.Array]):
+        enc_out = self.encode(params, batch["frames"])
+        x, _ = self._decode_trunk(params, batch["tokens"], enc_out,
+                                  collect=False)
+        return L.logits_from_hidden(self.cfg, params["embed"], x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        # full-length decode trunk (keeps chunked-attention divisibility);
+        # drop the final position's logits instead of shifting inputs.
+        enc_out = self.encode(params, batch["frames"])
+        toks = batch["tokens"]
+        x, _ = self._decode_trunk(params, toks, enc_out, collect=False)
+        logits = L.logits_from_hidden(self.cfg, params["embed"], x)[:, :-1]
+        ce = L.cross_entropy(logits, toks[:, 1:], batch.get("mask"))
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> EncDecState:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        S_dec = max_len // 2
+        S_enc = max_len - S_dec
+        hd = cfg.resolved_head_dim
+        kv = attn.init_kv_cache(cfg, cfg.num_layers, batch, S_dec, dtype=dt)
+        ck = jnp.zeros((cfg.num_layers, batch, S_enc, cfg.num_kv_heads, hd), dt)
+        return EncDecState(kv, ck, jnp.zeros_like(ck), jnp.zeros((), jnp.int32))
+
+    def cache_axes(self) -> EncDecState:
+        kv = attn.cache_axes(self.cfg)
+        cax = ("layers", "batch", "cache_seq", "act_kv_heads", "head_dim")
+        return EncDecState(kv, cax, cax, ())
+
+    def prefill(self, params, batch,
+                max_len: Optional[int] = None) -> Tuple[jax.Array, EncDecState]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        toks = batch["tokens"]
+        x, caches = self._decode_trunk(params, toks, enc_out, collect=True)
+        logits = L.logits_from_hidden(cfg, params["embed"], x[:, -1:, :])
+        (k, v), (ck, cv) = caches
+        S = toks.shape[1]
+        pad = (max_len or S) - S
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kv = attn.KVCache(k, v, jnp.asarray(S, jnp.int32))
+        return logits, EncDecState(kv, ck, cv, jnp.asarray(S, jnp.int32))
+
+    def decode_step(self, params, state: EncDecState, tokens):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = L.embed_tokens(cfg, params["embed"], tokens)
+        index = state.index
+
+        def body(x, xs):
+            pl, kc, vc, ck, cv = xs
+            h = L.norm_apply(cfg, x, pl["norm1"])
+            o, kc, vc = attn.attn_decode_apply(cfg, pl["self_attn"], h, kc,
+                                               vc, index)
+            x = x + o
+            hx = L.norm_apply(cfg, x, pl["norm_x"])
+            p = pl["cross_attn"]
+            q = jnp.einsum("bsd,dhk->bshk", hx, p["wq"].astype(dt))
+            o2 = attn.decode_attention(q, ck, cv, jnp.asarray(ck.shape[1] - 1))
+            x = x + jnp.einsum("bshk,hkd->bsd", o2, p["wo"].astype(dt))
+            h2 = L.norm_apply(cfg, x, pl["norm2"])
+            x = x + L.mlp_apply(cfg, pl["mlp"], h2)
+            return x, (kc, vc)
+
+        kv = state.self_kv
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["dec_layers"], kv.k, kv.v,
+                      state.cross_k, state.cross_v))
+        x = L.norm_apply(cfg, x, params["final_norm"])
+        logits = L.logits_from_hidden(cfg, params["embed"], x)
+        new_kv = attn.KVCache(nk, nv, index + 1)
+        return logits, EncDecState(new_kv, state.cross_k, state.cross_v,
+                                   index + 1)

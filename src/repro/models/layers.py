@@ -1,0 +1,155 @@
+"""Common building blocks: norms, RoPE, gated MLPs, embeddings.
+
+Functional style: params are plain dict pytrees produced from spec trees
+(`repro.models.spec`). All blocks annotate activations with logical axes
+via `lshard` so the same code runs single-device (no-op) and on the
+production mesh (GSPMD constraints).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models.spec import P
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> P:
+    return P((d,), ("act_embed",), init="zeros")  # stored as delta from 1
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+            one_plus: bool = True) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if one_plus else w.astype(jnp.float32)
+    return (y * scale).astype(dt)
+
+
+def layernorm_spec(d: int) -> dict:
+    return {"w": P((d,), ("act_embed",), init="zeros"),
+            "b": P((d,), ("act_embed",), init="zeros")}
+
+
+def layernorm(x: jax.Array, p: dict, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["w"].astype(jnp.float32)) + p["b"].astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(cfg, x: jax.Array, p) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p, cfg.norm_eps)
+    return rmsnorm(x, p, cfg.norm_eps, one_plus=cfg.rmsnorm_one_plus or True)
+
+
+def norm_spec(cfg, d: int):
+    return layernorm_spec(d) if cfg.norm == "layernorm" else rmsnorm_spec(d)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    angles = angles[..., None, :]  # broadcast over heads: [..., S, 1, D/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d: int, ff: int) -> dict:
+    return {
+        "wi": P((d, ff), ("embed", "mlp")),
+        "wg": P((d, ff), ("embed", "mlp")),
+        "wo": P((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    act = jax.nn.gelu if cfg.activation == "geglu" else jax.nn.silu
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+    h = (act(g.astype(jnp.float32)).astype(dt)) * h
+    h = lshard(h, *(("batch",) + ("seq",) * (h.ndim - 2) + ("act_mlp",)))
+    out = jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg) -> dict:
+    V = cfg.padded_vocab
+    d = {"embedding": P((V, cfg.d_model), ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        d["unembed"] = P((cfg.d_model, V), ("embed", "vocab"), init="small")
+    return d
+
+
+def embed_tokens(cfg, p: dict, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = x * jnp.asarray(cfg.embedding_multiplier, x.dtype)
+    return lshard(x, "batch", "seq", "act_embed")
+
+
+def logits_from_hidden(cfg, p: dict, x: jax.Array) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"].astype(dt))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"].astype(dt))
+    logits = logits / jnp.asarray(cfg.logits_scaling, logits.dtype)
+    if cfg.attn_logit_softcap:  # (reused as final softcap when configured)
+        c = cfg.attn_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab_size:  # mask vocab-padding slots
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e9, logits.dtype), logits)
+    axes = ("batch",) + ("seq",) * (logits.ndim - 2) + ("act_vocab",)
+    return lshard(logits, *axes)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Vocab-sharding-friendly CE: the gold logit is extracted with a
+    one-hot contraction (fuses into the reduction and keeps the vocab dim
+    sharded) instead of take_along_axis (which would all-gather logits)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = (labels[..., None] == jnp.arange(V)[None, None, :])
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

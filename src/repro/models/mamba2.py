@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD, state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (matmul-friendly: quadratic
+attention-like compute within chunks + a linear recurrence across chunk
+states), which maps onto the MXU. Decode uses the O(1) recurrent update
+``h = h*exp(dt*A) + dt * B ⊗ x``. Both paths share parameters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models.spec import P
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.state_dim
+    return s, d_in, nheads, conv_ch
+
+
+def mamba_specs(cfg) -> dict:
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": P((d, 2 * d_in + 2 * s.n_groups * s.state_dim + nheads),
+                     ("embed", None)),
+        "conv_w": P((s.conv_dim, conv_ch), ("conv", None), init="small"),
+        "conv_b": P((conv_ch,), (None,), init="zeros"),
+        "a_log": P((nheads,), ("ssm_heads",), init="mamba_alog", dtype="float32"),
+        "dt_bias": P((nheads,), ("ssm_heads",), init="mamba_dt", dtype="float32"),
+        "d_skip": P((nheads,), ("ssm_heads",), init="ones", dtype="float32"),
+        "norm_w": P((d_in,), ("act_rnn",), init="zeros"),
+        "out_proj": P((d_in, d), ("rnn", "embed")),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # [L, B, conv_dim-1, conv_ch]
+    state: jax.Array  # [L, B, H, P, N] f32
+
+
+def init_mamba_cache(cfg, layers: int, batch: int) -> MambaCache:
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    return MambaCache(
+        jnp.zeros((layers, batch, s.conv_dim - 1, conv_ch), jnp.dtype(cfg.dtype)),
+        jnp.zeros((layers, batch, nheads, s.head_dim, s.state_dim), jnp.float32))
+
+
+def mamba_cache_axes() -> MambaCache:
+    return MambaCache(("layers", "batch", None, "act_rnn"),
+                      ("layers", "batch", "act_ssm_heads", None, None))
+
+
+def _split_proj(cfg, zxbcdt):
+    s, d_in, nheads, _ = _dims(cfg)
+    gn = s.n_groups * s.state_dim
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, B, C, dt
+
+
+def _gated_norm(y, z, w, eps):
+    dt = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: [b,S,H,P]; dt: [b,S,H] (>0); A: [H] (<0); B,C: [b,S,G,N].
+    Returns y: [b,S,H,P] and final state [b,H,P,N] (f32).
+    """
+    b, S, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    nc = S // chunk
+    L = chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, L, H, Pd).astype(f32)
+    dtc = dt.reshape(b, nc, L, H).astype(f32)
+    Bc = jnp.repeat(B.reshape(b, nc, L, G, N), rep, axis=3).astype(f32)
+    Cc = jnp.repeat(C.reshape(b, nc, L, G, N), rep, axis=3).astype(f32)
+
+    lam = dtc * A[None, None, None, :]             # log-decay, <=0 [b,nc,L,H]
+    cum = jnp.cumsum(lam, axis=2)                  # within-chunk cumulative
+    total = cum[:, :, -1, :]                       # [b,nc,H]
+
+    # ---- intra-chunk (quadratic within chunk, causal) --------------------
+    # scores[i,j] = C_i·B_j * exp(cum_i - cum_j) * dt_j  for j <= i
+    cb = jnp.einsum("bclhn,bcmhn->bchlm", Cc, Bc)  # [b,nc,H,L,L]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [b,nc,l,m,H]
+    decay = jnp.exp(jnp.moveaxis(diff, 4, 2))              # [b,nc,H,l,m]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    scores = jnp.where(mask[None, None, None], cb * decay, 0.0)
+    xdt = xc * dtc[..., None]                      # [b,nc,L,H,P]
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", scores, xdt)
+
+    # ---- chunk states + inter-chunk recurrence ---------------------------
+    # state_c = sum_j B_j ⊗ xdt_j * exp(total - cum_j)
+    dec_end = jnp.exp(total[:, :, None, :] - cum)  # [b,nc,L,H]
+    st = jnp.einsum("bclhn,bclhp,bclh->bchpn", Bc, xc * dtc[..., None], dec_end)
+
+    def step(h, xs):
+        st_c, tot_c = xs
+        h_new = h * jnp.exp(tot_c)[..., None, None] + st_c
+        return h_new, h  # emit state *entering* this chunk
+
+    h0 = jnp.zeros((b, H, Pd, N), f32)
+    h_final, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(st, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                # [b,nc,H,P,N]
+
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, h_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, S, H, Pd)
+    return y.astype(x.dtype), h_final
+
+
+def mamba_apply(cfg, p: dict, x: jax.Array, *,
+                return_state: bool = False):
+    """Full-sequence mamba block. x: [B,S,D] -> [B,S,D]."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    dt_ = jnp.dtype(cfg.dtype)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    z, xin, B, C, dtr = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(dt_),
+                                        p["conv_b"].astype(dt_)).astype(jnp.float32)).astype(dt_)
+    xin, B, C = jnp.split(conv_out, [d_in, d_in + s.n_groups * s.state_dim], axis=-1)
+    bsz, S = x.shape[0], x.shape[1]
+    xh = xin.reshape(bsz, S, nheads, s.head_dim)
+    xh = lshard(xh, "batch", "seq", "act_ssm_heads", None)
+    Bg = B.reshape(bsz, S, s.n_groups, s.state_dim)
+    Cg = C.reshape(bsz, S, s.n_groups, s.state_dim)
+    dt_pos = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["a_log"])
+    chunk = s.chunk if S % s.chunk == 0 and S >= s.chunk else S
+    y, h_final = ssd_chunked(xh, dt_pos, A, Bg, Cg, chunk)
+    y = y + xh.astype(y.dtype) * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, S, d_in)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    out = lshard(out, "batch", "seq", "act_embed")
+    if return_state:
+        conv_state = conv_in[:, -(s.conv_dim - 1):, :]
+        return out, (conv_state.astype(dt_), h_final)
+    return out, None
+
+
+def mamba_decode_step(cfg, p: dict, x: jax.Array, conv_state, state):
+    """One-token step. x: [B,1,D]; conv_state: [B,K-1,C]; state: [B,H,P,N]."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    dt_ = jnp.dtype(cfg.dtype)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    z, xin, B, C, dtr = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)  # [B,1,C]
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # [B,K,C]
+    w = p["conv_w"].astype(dt_)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(dt_)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(dt_)[:, None, :]
+    xin, B, C = jnp.split(conv_out, [d_in, d_in + s.n_groups * s.state_dim], axis=-1)
+    bsz = x.shape[0]
+    xh = xin.reshape(bsz, nheads, s.head_dim).astype(jnp.float32)
+    rep = nheads // s.n_groups
+    Bg = jnp.repeat(B.reshape(bsz, s.n_groups, s.state_dim), rep, axis=1)
+    Cg = jnp.repeat(C.reshape(bsz, s.n_groups, s.state_dim), rep, axis=1)
+    dt_pos = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_pos * A[None, :])                     # [B,H]
+    upd = jnp.einsum("bhn,bhp->bhpn", Bg, xh * dt_pos[..., None])
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Cg, state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(dt_)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    return out, (window[:, 1:, :], state)

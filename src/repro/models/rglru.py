@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Recurrence: a_t = exp(-c * softplus(Λ) * r_t),
+            h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+with per-channel recurrence/input gates (r_t, i_t). Train/prefill uses
+``jax.lax.associative_scan`` (log-depth on TPU); decode is the O(1) update.
+The block wraps the recurrence with in/out projections, a short causal
+conv, and a GeGLU-gated output branch, following the Griffin block layout.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+from repro.models.spec import P
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def rglru_specs(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    k = 4  # temporal conv width
+    return {
+        "in_x": P((d, w), ("embed", "rnn")),
+        "in_gate": P((d, w), ("embed", "rnn")),
+        "conv_w": P((k, w), ("conv", "rnn"), init="small"),
+        "conv_b": P((w,), ("rnn",), init="zeros"),
+        "a_param": P((w,), ("rnn",), init="rglru_a", dtype="float32"),
+        "w_rgate": P((w,), ("rnn",), init="zeros", dtype="float32"),
+        "b_rgate": P((w,), ("rnn",), init="zeros", dtype="float32"),
+        "w_igate": P((w,), ("rnn",), init="zeros", dtype="float32"),
+        "b_igate": P((w,), ("rnn",), init="zeros", dtype="float32"),
+        "out": P((w, d), ("rnn", "embed")),
+    }
+
+
+class RGLRUCache(NamedTuple):
+    conv: jax.Array  # [L, B, k-1, W]
+    h: jax.Array     # [L, B, W] f32
+
+
+def rglru_cache_axes() -> RGLRUCache:
+    return RGLRUCache(("layers", "batch", None, "act_rnn"),
+                      ("layers", "batch", "act_rnn"))
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _gates(p, xb):
+    """Per-channel gates -> (log_a [B,S,W] (<=0), beta·i·x input term)."""
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["w_rgate"] + p["b_rgate"])
+    i = jax.nn.sigmoid(xf * p["w_igate"] + p["b_igate"])
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * r          # <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9))
+    return log_a, beta * i * xf
+
+
+def rglru_apply(cfg, p: dict, x: jax.Array, *, return_state: bool = False):
+    """Full-sequence Griffin recurrent block. x: [B,S,D]."""
+    dt = jnp.dtype(cfg.dtype)
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt))
+    gb = jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(dt))
+    xb = lshard(xb, "batch", "seq", "act_rnn")
+    conv_in = xb
+    xb = _causal_conv(xb, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    log_a, bix = _gates(p, xb)
+    a = jnp.exp(log_a)
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, bix), axis=1)
+    y = h * jax.nn.gelu(gb.astype(jnp.float32))
+    out = jnp.einsum("bsw,wd->bsd", y.astype(dt), p["out"].astype(dt))
+    out = lshard(out, "batch", "seq", "act_embed")
+    if return_state:
+        k = p["conv_w"].shape[0]
+        return out, (conv_in[:, -(k - 1):, :].astype(dt), h[:, -1, :])
+    return out, None
+
+
+def rglru_decode_step(cfg, p: dict, x: jax.Array, conv_state, h):
+    """One-token step. x: [B,1,D]; conv_state [B,k-1,W]; h [B,W] f32."""
+    dt = jnp.dtype(cfg.dtype)
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(dt))
+    gb = jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(dt))
+    window = jnp.concatenate([conv_state, xb], axis=1)       # [B,k,W]
+    w = p["conv_w"].astype(dt)
+    xc = (jnp.einsum("bkw,kw->bw", window, w) + p["conv_b"].astype(dt))[:, None, :]
+    log_a, bix = _gates(p, xc)
+    h_new = jnp.exp(log_a[:, 0]) * h + bix[:, 0]
+    y = h_new * jax.nn.gelu(gb[:, 0].astype(jnp.float32))
+    out = jnp.einsum("bw,wd->bd", y.astype(dt), p["out"].astype(dt))[:, None, :]
+    return out, (window[:, 1:, :], h_new)

@@ -1,0 +1,100 @@
+"""Parameter specs: one source of truth for shapes, init, and sharding axes.
+
+Each model family builds a nested dict of ``P`` specs; ``init_params``
+materializes arrays, ``axes_tree`` yields the logical-axes pytree used to
+derive NamedShardings, and ``abstract_params`` yields ShapeDtypeStructs for
+the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed | small
+    dtype: Optional[str] = None  # default: cfg.param_dtype
+    fan_in: Optional[int] = None  # override for scaled init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_specs(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=_is_spec)
+
+
+def init_params(specs, rng: jax.Array, default_dtype: str = "float32"):
+    """Materialize parameter arrays from the spec tree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+
+    def make(spec: P, key):
+        dt = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        if spec.init == "small":
+            return jax.random.normal(key, spec.shape, jnp.float32).astype(dt) * 0.02
+        if spec.init == "embed":
+            return jax.random.normal(key, spec.shape, jnp.float32).astype(dt) * 0.02
+        if spec.init == "rglru_a":
+            # A parameter: softplus^-1 of decay in [0.9, 0.999]
+            u = jax.random.uniform(key, spec.shape, jnp.float32, 0.9, 0.999)
+            a = -0.5 * jnp.log(u)  # c*softplus(L) ~= -log(u)
+            return jnp.log(jnp.expm1(jnp.maximum(a / 8.0, 1e-6))).astype(dt)
+        if spec.init == "mamba_alog":
+            a = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(a).astype(dt)
+        if spec.init == "mamba_dt":
+            dt0 = jnp.exp(jax.random.uniform(key, spec.shape, jnp.float32)
+                          * (np.log(0.1) - np.log(0.001)) + np.log(0.001))
+            return (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(dt)  # inv softplus
+        # fan-in scaled normal
+        fan = spec.fan_in if spec.fan_in else (spec.shape[0] if spec.shape else 1)
+        scale = 1.0 / np.sqrt(max(fan, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dt)
+
+    arrs = [make(s, k) for s, k in zip(leaves, rngs)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(specs, default_dtype: str = "float32"):
+    """ShapeDtypeStruct tree (dry-run stand-ins, no allocation)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        specs)
+
+
+def axes_tree(specs):
+    """Pytree of logical-axes tuples, matching the params pytree."""
+    return tree_map_specs(lambda s: s.axes, specs)
+
+
+def param_bytes(specs, default_dtype: str = "float32") -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype or default_dtype).itemsize
+                   for s in leaves))
+
+
+def stack_specs(spec: P, n: int, axis_name: str = "layers") -> P:
+    """Add a leading scanned-layers dimension to a spec."""
+    return P((n,) + spec.shape, (axis_name,) + spec.axes,
+             init=spec.init, dtype=spec.dtype,
+             fan_in=spec.fan_in or (spec.shape[0] if spec.shape else None))
+
+
+def stack_tree(specs, n: int):
+    return tree_map_specs(lambda s: stack_specs(s, n), specs)

@@ -1,0 +1,433 @@
+"""Decoder-only LM assembling the block zoo (attn/MoE/SSM/RG-LRU).
+
+One class serves the dense, moe, ssm, hybrid and vlm families. Layers are
+scanned (homogeneous stacks -> O(1) HLO in depth) with configurable remat.
+Hybrid archs scan over repeating pattern *cycles* with an unrolled
+remainder. Decode threads per-layer caches through the scan as ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import current_mesh, lshard
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba2, moe, rglru
+from repro.models.spec import (P, abstract_params, axes_tree, init_params,
+                               stack_tree, tree_map_specs)
+
+
+def _remat(cfg, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # 'full': save nothing
+
+
+class DecodeState(NamedTuple):
+    """Unified per-arch decode cache."""
+    kv: Optional[attn.KVCache]          # attn layers (stacked)
+    conv: Optional[jax.Array]           # ssm/rglru conv states (stacked)
+    rec: Optional[jax.Array]            # ssm state / rglru hidden (stacked)
+    index: jax.Array                    # next absolute position (scalar)
+
+
+class LM:
+    """Unified decoder-only language model."""
+
+    def __init__(self, cfg, attn_impl: str = "chunked"):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.kinds = cfg.layer_kinds()
+
+    # ------------------------------------------------------------------
+    # Parameter specs
+    # ------------------------------------------------------------------
+    def _block_specs(self, kind: str) -> dict:
+        cfg = self.cfg
+        s: Dict[str, Any] = {"norm1": L.norm_spec(cfg, cfg.d_model)}
+        if kind == "attn":
+            s["attn"] = attn.attn_specs(cfg)
+            s["norm2"] = L.norm_spec(cfg, cfg.d_model)
+            if cfg.is_moe:
+                s["moe"] = moe.moe_specs(cfg)
+            else:
+                s["mlp"] = L.mlp_specs(cfg.d_model, cfg.d_ff)
+        elif kind == "ssm":
+            s["ssm"] = mamba2.mamba_specs(cfg)
+        elif kind == "rglru":
+            s["rglru"] = rglru.rglru_specs(cfg)
+            s["norm2"] = L.norm_spec(cfg, cfg.d_model)
+            s["mlp"] = L.mlp_specs(cfg.d_model, cfg.d_ff)
+        else:
+            raise ValueError(kind)
+        return s
+
+    def specs(self) -> dict:
+        cfg = self.cfg
+        out: Dict[str, Any] = {"embed": L.embed_specs(cfg),
+                               "final_norm": L.norm_spec(cfg, cfg.d_model)}
+        if cfg.block_pattern:
+            pat = cfg.block_pattern
+            nc, rest = divmod(cfg.num_layers, len(pat))
+            cyc = {f"slot{i}": stack_tree(self._block_specs(k), nc)
+                   for i, k in enumerate(pat)}
+            out["cycles"] = cyc
+            for i in range(rest):
+                out[f"rest{i}"] = self._block_specs(pat[i])
+        else:
+            out["layers"] = stack_tree(self._block_specs(self.kinds[0]),
+                                       cfg.num_layers)
+        return out
+
+    def init(self, rng: jax.Array):
+        return init_params(self.specs(), rng, self.cfg.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.specs(), self.cfg.param_dtype)
+
+    def param_axes(self):
+        return axes_tree(self.specs())
+
+    # ------------------------------------------------------------------
+    # Blocks (full sequence)
+    # ------------------------------------------------------------------
+    def _apply_block(self, kind: str, p: dict, x, positions, aux,
+                     collect_cache: bool = False):
+        cfg = self.cfg
+        cache = None
+        h = L.norm_apply(cfg, x, p["norm1"])
+        if kind == "attn":
+            window = cfg.sliding_window if cfg.family != "hybrid" else cfg.local_attn_window
+            o, kv = attn.attn_apply(cfg, p["attn"], h, positions=positions,
+                                    causal=True, window=window,
+                                    impl=self.attn_impl,
+                                    kv_for_cache=collect_cache)
+            x = x + o * cfg.residual_multiplier
+            h2 = L.norm_apply(cfg, x, p["norm2"])
+            if cfg.is_moe:
+                o2, a = moe.moe_apply(cfg, p["moe"], h2, mesh=current_mesh())
+                aux = aux + a
+            else:
+                o2 = L.mlp_apply(cfg, p["mlp"], h2)
+            x = x + o2 * cfg.residual_multiplier
+            cache = kv
+        elif kind == "ssm":
+            o, st = mamba2.mamba_apply(cfg, p["ssm"], h,
+                                       return_state=collect_cache)
+            x = x + o
+            cache = st
+        elif kind == "rglru":
+            o, st = rglru.rglru_apply(cfg, p["rglru"], h,
+                                      return_state=collect_cache)
+            x = x + o
+            h2 = L.norm_apply(cfg, x, p["norm2"])
+            x = x + L.mlp_apply(cfg, p["mlp"], h2)
+            cache = st
+        # sequence-parallel residual annotation (no-op unless the
+        # 'residual_seq' rule maps to a mesh axis — see §Perf)
+        x = lshard(x, "batch", "residual_seq", "act_embed")
+        return x, aux, cache
+
+    # ------------------------------------------------------------------
+    # Forward (train / prefill trunk)
+    # ------------------------------------------------------------------
+    def hidden(self, params, tokens, *, collect_cache: bool = False):
+        """tokens [B,S] -> hidden [B,S,D], aux, caches(list per layer-group)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = L.embed_tokens(cfg, params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        aux0 = jnp.zeros((), jnp.float32)
+        caches: Dict[str, Any] = {}
+
+        if cfg.block_pattern:
+            pat = cfg.block_pattern
+
+            def cycle_body(carry, pc):
+                x, aux = carry
+                cs = []
+                for i, k in enumerate(pat):
+                    x, aux, c = self._apply_block(k, pc[f"slot{i}"], x,
+                                                  positions, aux,
+                                                  collect_cache)
+                    cs.append(c)
+                return (x, aux), tuple(cs)
+
+            body = _remat(cfg, cycle_body)
+            (x, aux), cyc_caches = jax.lax.scan(body, (x, aux0),
+                                                params["cycles"])
+            caches["cycles"] = cyc_caches
+            i = 0
+            while f"rest{i}" in params:
+                x, aux, c = self._apply_block(pat[i], params[f"rest{i}"], x,
+                                              positions, aux, collect_cache)
+                caches[f"rest{i}"] = c
+                i += 1
+        else:
+            kind = self.kinds[0]
+
+            def body(carry, pl):
+                x, aux = carry
+                x, aux, c = self._apply_block(kind, pl, x, positions, aux,
+                                              collect_cache)
+                return (x, aux), c
+
+            (x, aux), layer_caches = jax.lax.scan(_remat(cfg, body),
+                                                  (x, aux0),
+                                                  params["layers"])
+            caches["layers"] = layer_caches
+
+        x = L.norm_apply(cfg, x, params["final_norm"])
+        return x, aux, caches
+
+    def apply(self, params, tokens):
+        x, aux, _ = self.hidden(params, tokens)
+        return L.logits_from_hidden(self.cfg, params["embed"], x), aux
+
+    def loss(self, params, batch):
+        # apply on the FULL sequence (keeps chunked-attention divisibility;
+        # shifting inputs to S-1 would silently fall back to quadratic
+        # attention) and drop the last position's logits instead.
+        tokens = batch["tokens"]
+        logits, aux = self.apply(params, tokens)
+        logits = logits[:, :-1]
+        labels = tokens[:, 1:]
+        mask = batch.get("mask")
+        mask = mask[:, 1:] if mask is not None else None
+        ce = L.cross_entropy(logits, labels, mask)
+        coef = self.cfg.moe.router_aux_coef if self.cfg.is_moe else 0.0
+        nl = max(1, sum(1 for k in self.kinds if k == "attn"))
+        return ce + coef * aux / nl, {"ce": ce, "aux": aux / nl}
+
+    # ------------------------------------------------------------------
+    # Decode caches
+    # ------------------------------------------------------------------
+    def _attn_window(self) -> Optional[int]:
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return cfg.local_attn_window
+        return cfg.sliding_window
+
+    def _counts(self) -> Dict[str, int]:
+        c: Dict[str, int] = {}
+        for k in self.kinds:
+            c[k] = c.get(k, 0) + 1
+        return c
+
+    def init_cache(self, batch: int, max_len: int) -> DecodeState:
+        cfg = self.cfg
+        counts = self._counts()
+        dt = jnp.dtype(cfg.dtype)
+        kv = conv = rec = None
+        if counts.get("attn"):
+            kv = attn.init_kv_cache(cfg, counts["attn"], batch, max_len,
+                                    window=self._attn_window(), dtype=dt)
+        if counts.get("ssm"):
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nheads = d_in // s.head_dim
+            cc = d_in + 2 * s.n_groups * s.state_dim
+            conv = jnp.zeros((counts["ssm"], batch, s.conv_dim - 1, cc), dt)
+            rec = jnp.zeros((counts["ssm"], batch, nheads, s.head_dim,
+                             s.state_dim), jnp.float32)
+        if counts.get("rglru"):
+            w = cfg.rglru_width or cfg.d_model
+            conv = jnp.zeros((counts["rglru"], batch, 3, w), dt)
+            rec = jnp.zeros((counts["rglru"], batch, w), jnp.float32)
+        return DecodeState(kv, conv, rec, jnp.zeros((), jnp.int32))
+
+    def cache_axes(self) -> DecodeState:
+        counts = self._counts()
+        kv = attn.cache_axes(self.cfg) if counts.get("attn") else None
+        conv = rec = None
+        if counts.get("ssm"):
+            ax = mamba2.mamba_cache_axes()
+            conv, rec = ax.conv, ax.state
+        if counts.get("rglru"):
+            ax = rglru.rglru_cache_axes()
+            conv, rec = ax.conv, ax.h
+        return DecodeState(kv, conv, rec, ())
+
+    # ------------------------------------------------------------------
+    # Prefill
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens,
+                max_len: Optional[int] = None) -> Tuple[jax.Array, DecodeState]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        max_len = max_len or S
+        x, _, caches = self.hidden(params, tokens, collect_cache=True)
+        logits = L.logits_from_hidden(cfg, params["embed"], x[:, -1:, :])
+
+        # Flatten collected per-layer caches into DecodeState stacks.
+        # Layout: attn kv stacked in layer order [n_attn, B, ...];
+        # recurrent states flat [n_rec, B, ...] — for hybrids the cycle part
+        # is ordered (cycle0.slot0, cycle0.slot1, cycle1.slot0, ...) i.e.
+        # reshaped from [nc, slots_per_cycle, ...], remainder appended.
+        kv = conv = rec = None
+        W = self._attn_window()
+
+        if cfg.block_pattern:
+            pat = cfg.block_pattern
+            cyc = caches["cycles"]
+            kv_parts = [cyc[i] for i, k in enumerate(pat) if k == "attn"]
+            rec_parts = [cyc[i] for i, k in enumerate(pat) if k != "attn"]
+            kv_k = [c[0] for c in kv_parts]
+            kv_v = [c[1] for c in kv_parts]
+            convs, recs = None, None
+            if rec_parts:
+                # [nc, slots, B, ...] -> [nc*slots, B, ...] (layer order)
+                cv = jnp.stack([c[0] for c in rec_parts], axis=1)
+                st = jnp.stack([c[1] for c in rec_parts], axis=1)
+                convs = cv.reshape((-1,) + cv.shape[2:])
+                recs = st.reshape((-1,) + st.shape[2:])
+            i = 0
+            while f"rest{i}" in caches:
+                c = caches[f"rest{i}"]
+                if pat[i] == "attn":
+                    kv_k.append(c[0][None])
+                    kv_v.append(c[1][None])
+                else:
+                    convs = jnp.concatenate([convs, c[0][None]], axis=0)
+                    recs = jnp.concatenate([recs, c[1][None]], axis=0)
+                i += 1
+            k = jnp.concatenate(kv_k, axis=0) if kv_k else None
+            v = jnp.concatenate(kv_v, axis=0) if kv_k else None
+            conv, rec = convs, recs
+        else:
+            c = caches["layers"]
+            if self.kinds[0] == "attn":
+                k, v = c
+            else:
+                k = v = None
+                conv, rec = c
+
+        if k is not None:
+            if W is not None and W < S:
+                idx = jnp.arange(S - W, S) % W
+                kbuf = jnp.zeros(k.shape[:2] + (W,) + k.shape[3:], k.dtype)
+                vbuf = jnp.zeros_like(kbuf)
+                kbuf = kbuf.at[:, :, idx].set(k[:, :, -W:])
+                vbuf = vbuf.at[:, :, idx].set(v[:, :, -W:])
+                k, v = kbuf, vbuf
+            else:
+                pad = (W if W is not None else max_len) - S
+                if pad > 0:
+                    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            kv = attn.KVCache(k, v, jnp.asarray(S, jnp.int32))
+        return logits, DecodeState(kv, conv, rec, jnp.asarray(S, jnp.int32))
+
+    # ------------------------------------------------------------------
+    # Decode
+    # ------------------------------------------------------------------
+    def decode_step(self, params, state: DecodeState, tokens):
+        """tokens [B,1] -> (logits [B,1,V], new state)."""
+        cfg = self.cfg
+        x = L.embed_tokens(cfg, params["embed"], tokens)
+        index = state.index
+        W = self._attn_window()
+
+        def attn_step(p, x, kc, vc):
+            h = L.norm_apply(cfg, x, p["norm1"])
+            o, kc, vc = attn.attn_decode_apply(cfg, p["attn"], h, kc, vc,
+                                               index, window=W)
+            x = x + o * cfg.residual_multiplier
+            h2 = L.norm_apply(cfg, x, p["norm2"])
+            if cfg.is_moe:
+                o2, _ = moe.moe_apply(cfg, p["moe"], h2, mesh=current_mesh())
+            else:
+                o2 = L.mlp_apply(cfg, p["mlp"], h2)
+            return x + o2 * cfg.residual_multiplier, kc, vc
+
+        def ssm_step(p, x, cv, st):
+            h = L.norm_apply(cfg, x, p["norm1"])
+            o, (cv, st) = mamba2.mamba_decode_step(cfg, p["ssm"], h, cv, st)
+            return x + o, cv, st
+
+        def rglru_step(p, x, cv, st):
+            h = L.norm_apply(cfg, x, p["norm1"])
+            o, (cv, st) = rglru.rglru_decode_step(cfg, p["rglru"], h, cv, st)
+            x = x + o
+            h2 = L.norm_apply(cfg, x, p["norm2"])
+            return x + L.mlp_apply(cfg, p["mlp"], h2), cv, st
+
+        kv, conv, rec = state.kv, state.conv, state.rec
+        if cfg.block_pattern:
+            pat = cfg.block_pattern
+            n_rec_slots = sum(1 for k in pat if k != "attn")
+            nc = self.cfg.num_layers // len(pat)
+            n_rest = self.cfg.num_layers - nc * len(pat)
+            # split flat recurrent stacks into cycle part + remainder
+            cv_cyc = conv[:nc * n_rec_slots].reshape(
+                (nc, n_rec_slots) + conv.shape[1:])
+            st_cyc = rec[:nc * n_rec_slots].reshape(
+                (nc, n_rec_slots) + rec.shape[1:])
+            cv_rest, st_rest = conv[nc * n_rec_slots:], rec[nc * n_rec_slots:]
+
+            def cycle_body(x, xs):
+                pc, kc, vc, cv, st = xs
+                new_k, new_v = kc, vc
+                new_cv, new_st = list(cv), list(st)
+                r = 0
+                for i, kind in enumerate(pat):
+                    p = pc[f"slot{i}"]
+                    if kind == "attn":
+                        x, new_k, new_v = attn_step(p, x, kc, vc)
+                    elif kind == "rglru":
+                        x, new_cv[r], new_st[r] = rglru_step(p, x, cv[r], st[r])
+                        r += 1
+                    else:
+                        x, new_cv[r], new_st[r] = ssm_step(p, x, cv[r], st[r])
+                        r += 1
+                return x, (new_k, new_v, jnp.stack(new_cv), jnp.stack(new_st))
+
+            x, (nk, nv, ncv, nst) = jax.lax.scan(
+                cycle_body, x,
+                (params["cycles"], kv.k, kv.v, cv_cyc, st_cyc))
+            kv = attn.KVCache(nk, nv, kv.index)
+            for i in range(n_rest):
+                kind = pat[i]
+                p = params[f"rest{i}"]
+                if kind == "attn":  # pragma: no cover (no such arch in pool)
+                    raise NotImplementedError("attn remainder layers")
+                step = rglru_step if kind == "rglru" else ssm_step
+                cv_i, st_i = cv_rest[i], st_rest[i]
+                x, cv_i, st_i = step(p, x, cv_i, st_i)
+                cv_rest = cv_rest.at[i].set(cv_i)
+                st_rest = st_rest.at[i].set(st_i)
+            conv = jnp.concatenate(
+                [ncv.reshape((-1,) + ncv.shape[2:]), cv_rest], axis=0)
+            rec = jnp.concatenate(
+                [nst.reshape((-1,) + nst.shape[2:]), st_rest], axis=0)
+        else:
+            kind = self.kinds[0]
+            if kind == "attn":
+                def body(x, xs):
+                    pl, kc, vc = xs
+                    x, kc, vc = attn_step(pl, x, kc, vc)
+                    return x, (kc, vc)
+                x, (nk, nv) = jax.lax.scan(body, x,
+                                           (params["layers"], kv.k, kv.v))
+                kv = attn.KVCache(nk, nv, kv.index)
+            else:
+                def body(x, xs):
+                    pl, cv, st = xs
+                    x, cv, st = ssm_step(pl, x, cv, st)
+                    return x, (cv, st)
+                x, (conv, rec) = jax.lax.scan(body, x,
+                                              (params["layers"], conv, rec))
+
+        x = L.norm_apply(cfg, x, params["final_norm"])
+        logits = L.logits_from_hidden(cfg, params["embed"], x)
+        new_index = index + 1
+        if kv is not None:
+            kv = attn.KVCache(kv.k, kv.v, new_index)
+        return logits, DecodeState(kv, conv, rec, new_index)

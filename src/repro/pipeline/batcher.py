@@ -1,0 +1,161 @@
+"""Batch inference as a window function (paper §5.2 'Batch Inferences').
+
+``WindowBatcher`` reproduces the kernel-side mechanics the paper adds to
+PostgreSQL's window function: (1) window data aggregation — rows are
+copied into an intermediate state until the window fills; (2) batch
+inference execution — the filled window is converted to tensors in
+parallel and run as one batch; (3) cleanup + result caching — results are
+re-associated with row ids and raw rows released.
+
+``ContinuousBatcher`` is the serving-engine version: an admission queue
+with cost-model-selected batch size and waiting-time bound.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.pipeline.cost import OpProfile, choose_batch_size
+
+
+@dataclass
+class BatcherStats:
+    batches: int = 0
+    rows: int = 0
+    infer_seconds: float = 0.0
+    convert_seconds: float = 0.0
+
+    @property
+    def rows_per_second(self) -> float:
+        t = self.infer_seconds + self.convert_seconds
+        return self.rows / t if t else 0.0
+
+
+class WindowBatcher:
+    """Window-function-style batcher over a row stream."""
+
+    def __init__(self, infer_fn: Callable[[np.ndarray], np.ndarray],
+                 batch_size: int = 16, convert_workers: int = 4,
+                 convert_fn: Optional[Callable[[Any], np.ndarray]] = None):
+        self.infer_fn = infer_fn
+        self.batch_size = max(1, batch_size)
+        self.convert_fn = convert_fn or (lambda r: np.asarray(r, np.float32))
+        self._pool = (ThreadPoolExecutor(convert_workers)
+                      if convert_workers > 1 else None)
+        self._window: List[Any] = []
+        self._ids: List[int] = []
+        self._results: Dict[int, Any] = {}
+        self.stats = BatcherStats()
+
+    # (1) window data aggregation
+    def add(self, row_id: int, row: Any) -> None:
+        self._window.append(row)
+        self._ids.append(row_id)
+        if len(self._window) >= self.batch_size:
+            self._flush()
+
+    # (2) batch inference execution
+    def _flush(self) -> None:
+        if not self._window:
+            return
+        t0 = time.time()
+        if self._pool:
+            tensors = list(self._pool.map(self.convert_fn, self._window))
+        else:
+            tensors = [self.convert_fn(r) for r in self._window]
+        x = np.stack(tensors)
+        t1 = time.time()
+        out = self.infer_fn(x)
+        t2 = time.time()
+        # (3) result caching + cleanup
+        for rid, o in zip(self._ids, np.asarray(out)):
+            self._results[rid] = o
+        self.stats.batches += 1
+        self.stats.rows += len(self._ids)
+        self.stats.convert_seconds += t1 - t0
+        self.stats.infer_seconds += t2 - t1
+        self._window.clear()
+        self._ids.clear()
+
+    def finish(self) -> Dict[int, Any]:
+        self._flush()
+        return self._results
+
+
+def run_batched(rows: Sequence[Any],
+                infer_fn: Callable[[np.ndarray], np.ndarray],
+                batch_size: int = 16, **kw) -> List[Any]:
+    b = WindowBatcher(infer_fn, batch_size=batch_size, **kw)
+    for i, r in enumerate(rows):
+        b.add(i, r)
+    res = b.finish()
+    return [res[i] for i in range(len(rows))]
+
+
+# ---------------------------------------------------------------------------
+# Serving-engine continuous batcher
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    req_id: int
+    payload: Any
+    arrival: float = field(default_factory=time.time)
+
+
+class ContinuousBatcher:
+    """Admission queue -> cost-model batch size -> batched step loop."""
+
+    def __init__(self, step_fn: Callable[[List[Any]], List[Any]],
+                 profile: OpProfile, device: str = "tpu",
+                 max_wait_s: float = 0.01,
+                 mem_cap_bytes: float = 2e9):
+        self.step_fn = step_fn
+        self.batch_size = choose_batch_size(profile, device,
+                                            mem_cap_bytes=mem_cap_bytes)
+        self.max_wait_s = max_wait_s
+        self._q: "queue.Queue[Request]" = queue.Queue()
+        self._results: Dict[int, Any] = {}
+        self._done = threading.Event()
+        self.latencies: List[float] = []
+
+    def submit(self, req: Request) -> None:
+        self._q.put(req)
+
+    def _collect(self) -> List[Request]:
+        batch: List[Request] = []
+        deadline = None
+        while len(batch) < self.batch_size:
+            timeout = None
+            if deadline is not None:
+                timeout = max(0.0, deadline - time.time())
+                if timeout == 0:
+                    break
+            try:
+                r = self._q.get(timeout=timeout if timeout is not None else 0.002)
+            except queue.Empty:
+                break
+            batch.append(r)
+            if deadline is None:
+                deadline = time.time() + self.max_wait_s
+        return batch
+
+    def run(self, total: int) -> Dict[int, Any]:
+        served = 0
+        while served < total:
+            batch = self._collect()
+            if not batch:
+                continue
+            outs = self.step_fn([r.payload for r in batch])
+            now = time.time()
+            for r, o in zip(batch, outs):
+                self._results[r.req_id] = o
+                self.latencies.append(now - r.arrival)
+            served += len(batch)
+        return self._results

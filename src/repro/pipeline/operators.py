@@ -1,0 +1,96 @@
+"""Columnar operators for the batch inference pipeline.
+
+A *batch* is a dict of equal-length numpy columns. Relational operators
+(scan/filter/join/groupby/window) run on host; ``predict`` nodes run the
+resolved task model on the device the cost model chose; ``embed`` nodes
+materialize shared pre-embeddings (paper §5.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+Batch = Dict[str, np.ndarray]
+
+
+def batch_len(b: Batch) -> int:
+    return len(next(iter(b.values()))) if b else 0
+
+
+def concat_batches(bs: Sequence[Batch]) -> Batch:
+    keys = bs[0].keys()
+    return {k: np.concatenate([b[k] for b in bs]) for k in keys}
+
+
+def slice_batch(b: Batch, lo: int, hi: int) -> Batch:
+    return {k: v[lo:hi] for k, v in b.items()}
+
+
+def iter_chunks(b: Batch, size: int) -> Iterator[Batch]:
+    n = batch_len(b)
+    for lo in range(0, n, size):
+        yield slice_batch(b, lo, min(lo + size, n))
+
+
+# -- relational ops -----------------------------------------------------------
+
+def scan(table: Batch) -> Batch:
+    return table
+
+
+def filter_op(b: Batch, pred: Callable[[Batch], np.ndarray]) -> Batch:
+    mask = pred(b)
+    return {k: v[mask] for k, v in b.items()}
+
+
+def join(left: Batch, right: Batch, on: str,
+         suffix: str = "_r") -> Batch:
+    """Hash join (inner) on integer/str key column."""
+    idx: Dict[Any, List[int]] = {}
+    for i, k in enumerate(right[on]):
+        idx.setdefault(k if not isinstance(k, np.generic) else k.item(),
+                       []).append(i)
+    li, ri = [], []
+    for i, k in enumerate(left[on]):
+        kk = k if not isinstance(k, np.generic) else k.item()
+        for j in idx.get(kk, ()):
+            li.append(i)
+            ri.append(j)
+    li_a, ri_a = np.asarray(li, np.int64), np.asarray(ri, np.int64)
+    out = {k: v[li_a] for k, v in left.items()}
+    for k, v in right.items():
+        if k == on:
+            continue
+        out[k + suffix if k in out else k] = v[ri_a]
+    return out
+
+
+def groupby_agg(b: Batch, key: str, col: str,
+                agg: str = "mean") -> Batch:
+    keys, inv = np.unique(b[key], return_inverse=True)
+    sums = np.zeros(len(keys), np.float64)
+    cnts = np.zeros(len(keys), np.int64)
+    np.add.at(sums, inv, b[col].astype(np.float64))
+    np.add.at(cnts, inv, 1)
+    if agg == "mean":
+        vals = sums / np.maximum(cnts, 1)
+    elif agg == "sum":
+        vals = sums
+    elif agg == "count":
+        vals = cnts.astype(np.float64)
+    else:
+        raise ValueError(agg)
+    return {key: keys, f"{agg}_{col}": vals}
+
+
+def window_op(b: Batch, col: str, size: int, fn: str = "mean") -> Batch:
+    """Sliding window over a column (series tasks)."""
+    x = b[col].astype(np.float64)
+    if len(x) < size:
+        return dict(b)
+    c = np.convolve(x, np.ones(size) / size, mode="same")
+    out = dict(b)
+    out[f"{fn}{size}_{col}"] = c
+    return out

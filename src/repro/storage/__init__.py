@@ -1,0 +1,12 @@
+from repro.storage import mvec
+from repro.storage.catalog import Catalog, LayerInfo, ModelInfo
+from repro.storage.checkpoint import CheckpointManager
+from repro.storage.stores import (ApiModelRegistry, BlobStore,
+                                  DecoupledStore, flatten_params,
+                                  unflatten_like)
+
+__all__ = [
+    "mvec", "Catalog", "LayerInfo", "ModelInfo", "CheckpointManager",
+    "ApiModelRegistry", "BlobStore", "DecoupledStore", "flatten_params",
+    "unflatten_like",
+]

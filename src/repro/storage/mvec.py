@@ -1,0 +1,162 @@
+"""Mvec tensor representation (paper §3.2).
+
+A shape-aware binary tensor format: a *shape array* (dimension sizes) and a
+*data array* (row-major flattened elements), extended here with an explicit
+dtype tag so bf16/f32/int8 zoo tensors round-trip losslessly between the
+store and JAX. Supports SQL-style slicing and partial (range) loads without
+deserializing the whole tensor — the property the paper uses for
+fine-grained in-DB access, which we use for per-shard checkpoint reads.
+
+Wire layout (little-endian):
+  magic  u32 = 0x4D564543 ("MVEC")
+  dtype  u8 code | flags u8 | reserved u16
+  ndim   u32
+  shape  u64[ndim]
+  data   raw bytes, row-major
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import BinaryIO, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+MAGIC = 0x4D564543
+
+_DTYPES = ["float32", "float64", "float16", "bfloat16", "int8", "int16",
+           "int32", "int64", "uint8", "uint32", "bool"]
+_DTYPE_CODE = {d: i for i, d in enumerate(_DTYPES)}
+
+# bfloat16 has no numpy dtype; store as uint16 payload with the bf16 tag.
+_NP_FOR = {"bfloat16": np.uint16, "bool": np.bool_}
+
+
+def _np_dtype(name: str):
+    return np.dtype(_NP_FOR.get(name, name))
+
+
+def dtype_name(arr) -> str:
+    name = str(arr.dtype)
+    return name
+
+
+@dataclass(frozen=True)
+class MvecHeader:
+    dtype: str
+    shape: Tuple[int, ...]
+
+    @property
+    def itemsize(self) -> int:
+        return _np_dtype(self.dtype).itemsize
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * self.itemsize
+
+    @property
+    def header_size(self) -> int:
+        return 12 + 8 * len(self.shape)
+
+
+def encode(arr) -> bytes:
+    """JAX/numpy array -> Mvec bytes (row-major, shape+dtype preserved)."""
+    name = dtype_name(arr)
+    if name not in _DTYPE_CODE:
+        raise ValueError(f"unsupported dtype {name}")
+    np_arr = np.asarray(arr)
+    if name == "bfloat16":
+        np_arr = np_arr.view(np.uint16)
+    if np_arr.ndim:  # NB: ascontiguousarray promotes 0-d -> 1-d
+        np_arr = np.ascontiguousarray(np_arr)
+    head = struct.pack("<IBBH I", MAGIC, _DTYPE_CODE[name], 0, 0,
+                       np_arr.ndim)
+    head += struct.pack(f"<{np_arr.ndim}Q", *np_arr.shape)
+    return head + np_arr.tobytes()
+
+
+def decode_header(buf: Union[bytes, memoryview]) -> MvecHeader:
+    magic, code, _flags, _r, ndim = struct.unpack_from("<IBBH I", buf, 0)
+    if magic != MAGIC:
+        raise ValueError("not an Mvec buffer")
+    shape = struct.unpack_from(f"<{ndim}Q", buf, 12)
+    return MvecHeader(_DTYPES[code], tuple(int(s) for s in shape))
+
+
+def decode(buf: Union[bytes, memoryview]):
+    """Mvec bytes -> numpy array (bf16 returned via ml_dtypes if available,
+    else as a uint16 view tagged by the caller)."""
+    h = decode_header(buf)
+    raw = np.frombuffer(buf, dtype=_np_dtype(h.dtype), offset=h.header_size,
+                        count=int(np.prod(h.shape)) if h.shape else 1)
+    arr = raw.reshape(h.shape)
+    if h.dtype == "bfloat16":
+        try:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        except ImportError:  # pragma: no cover
+            pass
+    return arr
+
+
+def decode_slice(buf: Union[bytes, memoryview], start: int, stop: int):
+    """Partial load: rows [start, stop) along axis 0 without reading the
+    rest (the paper's SQL-level slicing / partial loading)."""
+    h = decode_header(buf)
+    if not h.shape:
+        raise ValueError("cannot slice a scalar")
+    rows = h.shape[0]
+    start = min(max(0, start), rows)
+    stop = min(max(stop, start), rows)
+    row_elems = 1
+    for d in h.shape[1:]:
+        row_elems *= d
+    offset = h.header_size + start * row_elems * h.itemsize
+    raw = np.frombuffer(buf, dtype=_np_dtype(h.dtype), offset=offset,
+                        count=(stop - start) * row_elems)
+    out = raw.reshape((stop - start,) + h.shape[1:])
+    if h.dtype == "bfloat16":
+        try:
+            import ml_dtypes
+            out = out.view(ml_dtypes.bfloat16)
+        except ImportError:  # pragma: no cover
+            pass
+    return out
+
+
+def read_header(f: BinaryIO) -> MvecHeader:
+    pos = f.tell()
+    head = f.read(12)
+    magic, code, _f, _r, ndim = struct.unpack("<IBBH I", head)
+    if magic != MAGIC:
+        raise ValueError("not an Mvec file")
+    shape = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+    f.seek(pos)
+    return MvecHeader(_DTYPES[code], tuple(int(s) for s in shape))
+
+
+def read_slice(f: BinaryIO, start: int, stop: int):
+    """File-level partial read (seek + read only the requested rows)."""
+    h = read_header(f)
+    pos = f.tell()
+    rows = h.shape[0]
+    start = min(max(0, start), rows)
+    stop = min(max(stop, start), rows)
+    row_bytes = h.itemsize
+    for d in h.shape[1:]:
+        row_bytes *= d
+    f.seek(pos + h.header_size + start * row_bytes)
+    raw = f.read((stop - start) * row_bytes)
+    arr = np.frombuffer(raw, dtype=_np_dtype(h.dtype)).reshape(
+        (stop - start,) + h.shape[1:])
+    f.seek(pos)
+    if h.dtype == "bfloat16":
+        try:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        except ImportError:  # pragma: no cover
+            pass
+    return arr

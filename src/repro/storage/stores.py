@@ -1,0 +1,277 @@
+"""Model stores (paper §3.1): BLOB all-in-one, decoupled layer tables with
+fine-tune deltas and partial loading, and API-based external endpoints.
+
+The decoupled store is also the substrate for distributed checkpointing
+(`repro.storage.checkpoint`): each layer is an independent Mvec file, so a
+restore can read any subset (elastic resharding, partial update, variant
+reuse) — the paper's partial-load property at pod scale.
+"""
+from __future__ import annotations
+
+import io
+import json
+import pickle
+import time
+import zlib
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.storage import mvec
+from repro.storage.catalog import Catalog, LayerInfo, ModelInfo
+
+
+def flatten_params(params) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def unflatten_like(template, flat: Dict[str, Any]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"missing layer {key}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# BLOB store
+# ---------------------------------------------------------------------------
+
+class BlobStore:
+    """All-in-one serialized model object (architecture + params)."""
+
+    def __init__(self, root: Path, catalog: Optional[Catalog] = None):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.catalog = catalog
+
+    def save(self, model_id: str, arch_meta: dict, params,
+             task_types: Optional[List[str]] = None,
+             modality: str = "text") -> Path:
+        flat = flatten_params(params)
+        payload = {
+            "arch": arch_meta,
+            "layers": {k: mvec.encode(np.asarray(v)) for k, v in flat.items()},
+        }
+        path = self.root / f"{model_id}.blob"
+        with open(path, "wb") as f:
+            pickle.dump(payload, f, protocol=4)
+        if self.catalog:
+            self.catalog.register_model(ModelInfo(
+                model_id=model_id, storage="blob", path=str(path),
+                task_types=task_types or [], modality=modality,
+                param_count=int(sum(np.asarray(v).size for v in flat.values()))))
+        return path
+
+    def load(self, model_id: str, template=None):
+        path = self.root / f"{model_id}.blob"
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        flat = {k: mvec.decode(b) for k, b in payload["layers"].items()}
+        if template is not None:
+            return payload["arch"], unflatten_like(template, flat)
+        return payload["arch"], flat
+
+
+# ---------------------------------------------------------------------------
+# Decoupled store
+# ---------------------------------------------------------------------------
+
+class DecoupledStore:
+    """Architecture/parameters separation with per-layer Mvec files.
+
+    Supports: partial loading (subset of layers), fine-tune *deltas*
+    (store only changed layers referencing a base model), and
+    range reads within a layer (Mvec slicing) for per-shard restore.
+    """
+
+    def __init__(self, root: Path, catalog: Optional[Catalog] = None):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.catalog = catalog or Catalog(self.root / "_catalog")
+
+    def _dir(self, model_id: str) -> Path:
+        return self.root / model_id
+
+    def save(self, model_id: str, arch_meta: dict, params,
+             base_model: Optional[str] = None,
+             task_types: Optional[List[str]] = None,
+             modality: str = "text") -> Path:
+        """Save params as layer tables. With ``base_model``, only layers
+        that differ from the base are written (delta storage)."""
+        d = self._dir(model_id)
+        d.mkdir(parents=True, exist_ok=True)
+        (d / "architecture.json").write_text(json.dumps(arch_meta, indent=1))
+        flat = flatten_params(params)
+        base_flat: Dict[str, Any] = {}
+        if base_model:
+            base_flat = {li.layer_name: li
+                         for li in self.catalog.get_layers(base_model)}
+        layers: List[LayerInfo] = []
+        for i, (key, leaf) in enumerate(sorted(flat.items())):
+            arr = np.asarray(leaf)
+            delta_of = None
+            if base_model and key in base_flat:
+                base_arr = self._read_layer_file(base_model, base_flat[key])
+                if (base_arr.shape == arr.shape
+                        and base_arr.tobytes() == arr.tobytes()):
+                    # unchanged: reference base layer, write nothing
+                    bi = base_flat[key]
+                    layers.append(LayerInfo(
+                        model_id=model_id, layer_name=key, layer_index=i,
+                        dtype=str(arr.dtype), shape=list(arr.shape),
+                        nbytes=arr.nbytes,
+                        file=f"@{base_model}/{bi.file}",
+                        delta_of=base_model))
+                    continue
+            fname = f"layer_{i:05d}.mvec"
+            (d / fname).write_bytes(mvec.encode(arr))
+            layers.append(LayerInfo(
+                model_id=model_id, layer_name=key, layer_index=i,
+                dtype=str(arr.dtype), shape=list(arr.shape),
+                nbytes=arr.nbytes, file=fname, delta_of=delta_of))
+        self.catalog.register_layers(model_id, layers)
+        self.catalog.register_model(ModelInfo(
+            model_id=model_id, storage="decoupled", path=str(d),
+            base_model=base_model, task_types=task_types or [],
+            modality=modality,
+            param_count=int(sum(np.asarray(v).size for v in flat.values()))))
+        return d
+
+    def _read_layer_file(self, model_id: str, li: LayerInfo,
+                         rows: Optional[Tuple[int, int]] = None):
+        file = li.file
+        if file.startswith("@"):  # delta reference into the base model
+            ref_model, ref_file = file[1:].split("/", 1)
+            path = self._dir(ref_model) / ref_file
+        else:
+            path = self._dir(model_id) / file
+        with open(path, "rb") as f:
+            if rows is not None:
+                return mvec.read_slice(f, rows[0], rows[1])
+            return mvec.decode(f.read())
+
+    def load(self, model_id: str, template=None,
+             layer_filter: Optional[Callable[[str], bool]] = None):
+        """Full or partial load. ``layer_filter(name)`` selects layers."""
+        arch = json.loads((self._dir(model_id) / "architecture.json")
+                          .read_text())
+        flat = {}
+        for li in self.catalog.get_layers(model_id):
+            if layer_filter and not layer_filter(li.layer_name):
+                continue
+            flat[li.layer_name] = self._read_layer_file(model_id, li)
+        if template is not None and layer_filter is None:
+            return arch, unflatten_like(template, flat)
+        return arch, flat
+
+    def load_layer_rows(self, model_id: str, layer_name: str,
+                        start: int, stop: int):
+        """Range read within one layer (per-shard restore path)."""
+        for li in self.catalog.get_layers(model_id):
+            if li.layer_name == layer_name:
+                return self._read_layer_file(model_id, li, rows=(start, stop))
+        raise KeyError(layer_name)
+
+    def stored_bytes(self, model_id: str) -> int:
+        """Actual new bytes on disk (deltas count 0 for referenced layers)."""
+        total = 0
+        for li in self.catalog.get_layers(model_id):
+            if not li.file.startswith("@"):
+                total += (self._dir(model_id) / li.file).stat().st_size
+        return total
+
+
+# ---------------------------------------------------------------------------
+# API-based models (simulated remote endpoints)
+# ---------------------------------------------------------------------------
+
+class ApiModelRegistry:
+    """External model endpoints as logical operators (paper §3.1).
+
+    No real network in this environment: endpoints are callables with a
+    latency model, retry/timeout logic, and a response cache — the same
+    control surface the paper describes for remote closed-source models.
+    """
+
+    def __init__(self, catalog: Optional[Catalog] = None):
+        self.catalog = catalog
+        self._endpoints: Dict[str, dict] = {}
+        self._cache: Dict[Tuple[str, bytes], Any] = {}
+        self.stats: Dict[str, Dict[str, float]] = {}
+
+    def register(self, model_id: str, fn: Callable, *,
+                 url: str = "https://api.example/v1",
+                 latency_s: float = 0.05, jitter_s: float = 0.0,
+                 failure_rate: float = 0.0, quota: Optional[int] = None,
+                 timeout_s: float = 1.0, max_retries: int = 3,
+                 cache: bool = True) -> None:
+        self._endpoints[model_id] = dict(
+            fn=fn, url=url, latency_s=latency_s, jitter_s=jitter_s,
+            failure_rate=failure_rate, quota=quota, used=0,
+            timeout_s=timeout_s, max_retries=max_retries, cache=cache)
+        self.stats[model_id] = {"calls": 0, "retries": 0, "cache_hits": 0,
+                                "latency_total": 0.0}
+        if self.catalog:
+            self.catalog.register_model(ModelInfo(
+                model_id=model_id, storage="api", path=url,
+                extra={"latency_s": latency_s}))
+
+    def invoke(self, model_id: str, payload, rng: Optional[np.random.Generator] = None):
+        ep = self._endpoints[model_id]
+        st = self.stats[model_id]
+        rng = rng or np.random.default_rng(0)
+        key = None
+        if ep["cache"]:
+            try:
+                key = (model_id, pickle.dumps(np.asarray(payload)))
+            except Exception:
+                key = None
+            if key is not None and key in self._cache:
+                st["cache_hits"] += 1
+                return self._cache[key]
+        if ep["quota"] is not None and ep["used"] >= ep["quota"]:
+            raise RuntimeError(f"quota exhausted for {model_id}")
+        last_err = None
+        for attempt in range(ep["max_retries"] + 1):
+            st["calls"] += 1
+            ep["used"] += 1
+            lat = ep["latency_s"] + float(rng.random()) * ep["jitter_s"]
+            if lat > ep["timeout_s"]:
+                st["retries"] += 1
+                last_err = TimeoutError(f"{model_id} timed out")
+                continue
+            if ep["failure_rate"] and float(rng.random()) < ep["failure_rate"]:
+                st["retries"] += 1
+                last_err = ConnectionError(f"{model_id} transient failure")
+                continue
+            st["latency_total"] += lat
+            time.sleep(min(lat, 0.002))  # token sleep, keep tests fast
+            out = ep["fn"](payload)
+            if key is not None:
+                self._cache[key] = out
+            return out
+        raise last_err or RuntimeError("unreachable")
+
+    def expected_latency(self, model_id: str) -> float:
+        return self._endpoints[model_id]["latency_s"]

@@ -1,0 +1,11 @@
+from repro.training.optimizer import (AdamWState, OptimizerConfig,
+                                      abstract_state, apply_updates,
+                                      init_state, state_axes)
+from repro.training.step import (make_eval_step, make_prefill_step,
+                                 make_serve_step, make_train_step)
+
+__all__ = [
+    "AdamWState", "OptimizerConfig", "abstract_state", "apply_updates",
+    "init_state", "state_axes", "make_eval_step", "make_prefill_step",
+    "make_serve_step", "make_train_step",
+]

@@ -1,0 +1,108 @@
+"""AdamW + schedules, from scratch (no optax dependency).
+
+Optimizer state is a pytree parallel to params (m, v in f32), sharded
+identically to the parameters (axes tree reuse), which makes FSDP'd
+optimizer state free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # bf16 moments halve optimizer HBM for trillion-param archs
+    # (beyond-paper distributed-memory optimization; see EXPERIMENTS.md).
+    opt_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_state(params, opt_dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(opt_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_state(abstract_params, opt_dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(opt_dtype)
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, dt), abstract_params)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), z, z)
+
+
+def state_axes(param_axes) -> AdamWState:
+    return AdamWState((), param_axes, param_axes)
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads,
+                  state: AdamWState) -> Tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    odt = jnp.dtype(cfg.opt_dtype)
+
+    def upd(p, g, m, v):
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/scales exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(odt), v32.astype(odt)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}

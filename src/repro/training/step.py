@@ -1,0 +1,81 @@
+"""jit-able train / prefill / serve step builders.
+
+These are the units the launcher jits onto the production mesh and the
+dry-run lowers+compiles per (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import (AdamWState, OptimizerConfig,
+                                      apply_updates)
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig,
+                    accum_steps: int = 1) -> Callable:
+    """fwd+bwd+AdamW. With ``accum_steps > 1`` the global batch is split
+    into microbatches scanned sequentially (gradient accumulation) —
+    activation memory scales with the microbatch, enabling 100B+ archs on
+    16 GB/chip meshes."""
+
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if accum_steps <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def mb(carry, mbatch):
+                gsum, lsum = carry
+                (l, m), g = grad_fn(params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(
+                mb, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        new_params, new_state, om = apply_updates(opt_cfg, params, grads,
+                                                  opt_state)
+        out = {"loss": loss, **metrics, **om}
+        return new_params, new_state, out
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        if model.cfg.is_encoder_decoder:
+            return model.prefill(params, batch)
+        return model.prefill(params, batch["tokens"])
+
+    return prefill_step
+
+
+def make_serve_step(model, greedy: bool = True) -> Callable:
+    """One decode step: (params, cache, tokens[B,1]) -> (next[B,1], cache)."""
+
+    def serve_step(params, state, tokens):
+        logits, state = model.decode_step(params, state, tokens)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return nxt, state
+
+    return serve_step

@@ -1,0 +1,64 @@
+"""Config registry + parameter accounting."""
+import pytest
+
+from repro.configs import (ALL_SHAPES, get_config, list_archs, shapes_for,
+                           smoke_config)
+
+EXPECTED_PARAMS_B = {
+    "llama3-405b": (390, 420),
+    "gemma-2b": (2.0, 3.0),
+    "granite-3-8b": (7.0, 9.0),
+    "h2o-danube-1.8b": (1.5, 2.1),
+    "mamba2-370m": (0.3, 0.5),
+    "recurrentgemma-9b": (7.5, 10.0),
+    "chameleon-34b": (32, 36),
+    "whisper-medium": (0.3, 0.8),
+    "olmoe-1b-7b": (6.0, 7.5),
+    "kimi-k2-1t-a32b": (950, 1100),
+}
+
+EXPECTED_ACTIVE_B = {"olmoe-1b-7b": (1.0, 1.6), "kimi-k2-1t-a32b": (28, 36)}
+
+
+def test_all_archs_registered():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_counts_match_public_numbers(arch):
+    cfg = get_config(arch)
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n}B outside [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_ACTIVE_B))
+def test_active_params_moe(arch):
+    cfg = get_config(arch)
+    lo, hi = EXPECTED_ACTIVE_B[arch]
+    n = cfg.active_param_count() / 1e9
+    assert lo <= n <= hi
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_shapes_and_long_context_rule(arch):
+    cfg = get_config(arch)
+    names = [s.name for s in shapes_for(cfg)]
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= set(names)
+    if arch in ("mamba2-370m", "recurrentgemma-9b", "h2o-danube-1.8b"):
+        assert "long_500k" in names, "sub-quadratic arch must run long_500k"
+    else:
+        assert "long_500k" not in names, "full-attention arch must skip it"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_config_small(arch):
+    cfg = smoke_config(arch)
+    assert cfg.d_model <= 256 and cfg.param_count() < 5e7
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_vocab_padding(arch):
+    cfg = get_config(arch)
+    assert cfg.padded_vocab % 256 == 0
+    assert 0 <= cfg.padded_vocab - cfg.vocab_size < 256

@@ -1,0 +1,80 @@
+"""Fault tolerance: restart-from-checkpoint, stragglers, elastic rescale."""
+import numpy as np
+import pytest
+
+from repro.storage import CheckpointManager
+from repro.training.fault import (ElasticScaler, StragglerMonitor,
+                                  TrainController)
+
+
+def test_controller_restarts_after_failure(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    fail_at = {17}
+
+    def step_fn(state, step):
+        if step in fail_at:
+            fail_at.clear()  # fail once
+            raise RuntimeError("simulated preemption")
+        return {"w": state["w"] + 1.0}
+
+    tc = TrainController(step_fn, cm, ckpt_every=5)
+    state, step = tc.run({"w": np.zeros(3)}, 30)
+    assert step == 30
+    # the failed step re-ran from the step-15 checkpoint
+    kinds = [k for k, _ in tc.events]
+    assert "failure" in kinds and "restart" in kinds
+    np.testing.assert_array_equal(state["w"], np.full(3, 30.0))
+
+
+def test_controller_gives_up_after_max_restarts(tmp_path):
+    cm = CheckpointManager(tmp_path)
+
+    def always_fail(state, step):
+        raise RuntimeError("dead host")
+
+    tc = TrainController(always_fail, cm, ckpt_every=5, max_restarts=3)
+    with pytest.raises(RuntimeError, match="restarts"):
+        tc.run({"w": np.zeros(1)}, 10)
+
+
+def test_controller_resumes_fresh_process(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    step_fn = lambda s, i: {"w": s["w"] + 1.0}
+    tc = TrainController(step_fn, cm, ckpt_every=10)
+    tc.run({"w": np.zeros(2)}, 20)
+    # "new process": fresh controller resumes from step 20's checkpoint
+    tc2 = TrainController(step_fn, cm, ckpt_every=10)
+    state, step = tc2.run({"w": np.zeros(2)}, 25)
+    assert step == 25
+    np.testing.assert_array_equal(state["w"], np.full(2, 25.0))
+    assert ("resume", {"step": 20}) in tc2.events
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(threshold=2.0, window=8, min_samples=4)
+    for _ in range(8):
+        for h in range(4):
+            mon.record(h, 1.0 if h != 2 else 3.5)
+    assert mon.stragglers() == [2]
+
+
+def test_straggler_needs_samples():
+    mon = StragglerMonitor(min_samples=4)
+    mon.record(0, 1.0)
+    mon.record(1, 9.0)
+    assert mon.stragglers() == []
+
+
+def test_elastic_scaler_reshard(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    state = {"p": np.arange(24, dtype=np.float32).reshape(12, 2)}
+    cm.save(5, state, num_shards=4)
+    es = ElasticScaler(num_hosts=4)
+    es.fail(1)
+    assert es.layout()["dp_degree"] == 3
+    plan = es.reshard_plan(cm, {"p": state["p"][:4]})
+    # healthy hosts 0,2,3 each get a contiguous 1/3 of rows
+    rows = np.concatenate([plan[h][0]["p"] for h in (0, 2, 3)])
+    np.testing.assert_array_equal(rows, state["p"])
+    es.recover(1)
+    assert es.layout()["dp_degree"] == 4

@@ -1,0 +1,89 @@
+"""Per-kernel allclose sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,bq,bk", [
+    (1, 2, 1, 128, 32, 64, 64),
+    (2, 4, 2, 256, 64, 64, 128),
+    (1, 8, 8, 256, 16, 128, 64),   # MHA (no GQA)
+    (2, 8, 1, 128, 64, 64, 64),    # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 96)])
+def test_flash_attention_sweep(dtype, B, Hq, Hkv, S, D, bq, bk, causal,
+                               window):
+    rng = jax.random.PRNGKey(B * 13 + S)
+    q = jax.random.normal(rng, (B, Hq, S, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, D),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, D),
+                          jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    assert err < _tol(dtype), err
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,bk", [
+    (2, 8, 2, 512, 64, 128),
+    (1, 4, 4, 256, 32, 64),
+    (3, 16, 2, 384, 16, 128),
+])
+@pytest.mark.parametrize("length_frac", [1.0, 0.6, 0.1])
+def test_decode_attention_sweep(dtype, B, Hq, Hkv, S, D, bk, length_frac):
+    rng = jax.random.PRNGKey(S)
+    q = jax.random.normal(rng, (B, Hq, D), jnp.float32).astype(dtype)
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, D),
+                           jnp.float32).astype(dtype)
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, D),
+                           jnp.float32).astype(dtype)
+    L = max(1, int(S * length_frac))
+    out = ops.decode_attention(q, kc, vc, L, block_k=bk, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, L)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    assert err < _tol(dtype), err
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("N,D,br", [(256, 512, 64), (512, 1024, 256),
+                                    (128, 384, 128)])
+def test_rmsnorm_sweep(dtype, N, D, br):
+    x = jax.random.normal(jax.random.PRNGKey(0), (N, D),
+                          jnp.float32).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (D,)) * 0.1)
+    out = ops.rmsnorm(x, w, block_rows=br, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    assert err < _tol(dtype), err
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("N,D,K,br", [(256, 128, 64, 64), (512, 64, 32, 128)])
+@pytest.mark.parametrize("mean,scale", [(0.0, 1.0), (0.5, 2.0)])
+def test_fused_embed_sweep(dtype, N, D, K, br, mean, scale):
+    x = jax.random.normal(jax.random.PRNGKey(0), (N, D),
+                          jnp.float32).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (D, K)) * 0.05)
+    out = ops.fused_embed(x, w, mean=mean, scale=scale, block_rows=br,
+                          interpret=True)
+    want = ref.fused_embed_ref(x, w, mean, scale)
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - want.astype(jnp.float32)).max())
+    assert err < _tol(dtype), err

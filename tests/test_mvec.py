@@ -1,0 +1,65 @@
+"""Mvec property tests (hypothesis): lossless roundtrip + slicing."""
+import io
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.storage import mvec
+
+shapes = st.lists(st.integers(1, 8), min_size=0, max_size=4)
+
+
+@settings(max_examples=60, deadline=None)
+@given(shapes, st.sampled_from(["float32", "int8", "int32", "float16"]))
+def test_roundtrip(shape, dtype):
+    rng = np.random.default_rng(sum(shape) + 1)
+    arr = (rng.standard_normal(shape) * 10).astype(dtype)
+    buf = mvec.encode(arr)
+    out = mvec.decode(buf)
+    assert out.shape == tuple(shape)
+    assert out.dtype == np.dtype(dtype)
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_bfloat16_roundtrip():
+    arr = jnp.asarray(np.random.default_rng(0).standard_normal((4, 5)),
+                      jnp.bfloat16)
+    buf = mvec.encode(arr)
+    hdr = mvec.decode_header(buf)
+    assert hdr.dtype == "bfloat16" and hdr.shape == (4, 5)
+    out = mvec.decode(buf)
+    assert np.asarray(jnp.asarray(out.view(np.uint16))
+                      ).tobytes() == np.asarray(arr).view(np.uint16).tobytes()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 6),
+       st.integers(0, 19), st.integers(1, 20))
+def test_slice_matches_numpy(rows, cols, start, count):
+    rng = np.random.default_rng(rows * 31 + cols)
+    arr = rng.standard_normal((rows, cols)).astype(np.float32)
+    buf = mvec.encode(arr)
+    stop = start + count
+    out = mvec.decode_slice(buf, start, stop)
+    np.testing.assert_array_equal(out, arr[max(0, start):min(stop, rows)])
+
+
+def test_file_range_read(tmp_path):
+    arr = np.arange(120, dtype=np.float32).reshape(12, 10)
+    p = tmp_path / "x.mvec"
+    p.write_bytes(mvec.encode(arr))
+    with open(p, "rb") as f:
+        hdr = mvec.read_header(f)
+        assert hdr.shape == (12, 10)
+        part = mvec.read_slice(f, 3, 7)
+        np.testing.assert_array_equal(part, arr[3:7])
+        part2 = mvec.read_slice(f, 0, 2)  # file offset must reset
+        np.testing.assert_array_equal(part2, arr[0:2])
+
+
+def test_rejects_garbage():
+    with pytest.raises(ValueError):
+        mvec.decode(b"\x00" * 64)

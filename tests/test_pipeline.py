@@ -1,0 +1,174 @@
+"""DAG scheduling (Algorithm 1), cost model, batcher, vector sharing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.pipeline import (Dag, Node, OpProfile, PipelineExecutor,
+                            VectorShareCache, WindowBatcher, batch_cost,
+                            choose_batch_size, choose_device, filter_op,
+                            groupby_agg, join, op_cost, run_batched,
+                            simd_normalize_embed, window_op)
+
+
+# -- DAG / Algorithm 1 ---------------------------------------------------
+
+def _diamond():
+    d = Dag()
+    d.add(Node("src", "scan"))
+    d.add(Node("a", "filter", fn=lambda x: x, cost_hint=1), deps=("src",))
+    d.add(Node("b", "predict", fn=lambda x: x, cost_hint=9), deps=("src",))
+    d.add(Node("c", "join", fn=lambda a, b: a, cost_hint=1,
+               meta={"arg_order": {"a": 0, "b": 1}}), deps=("a", "b"))
+    return d
+
+
+def test_topological_order_and_priority():
+    d = _diamond()
+    order = d.execution_order()
+    assert d.validate_topological(order)
+    # higher-cost ready op scheduled first within a wave
+    waves = d.stages()
+    assert waves[1][0] == "b"
+
+
+def test_cycle_detection():
+    d = _diamond()
+    d.edges.append(type(d.edges[0])("c", "a", "data"))
+    with pytest.raises(ValueError):
+        d.execution_order()
+
+
+def test_edge_labels():
+    d = _diamond()
+    d.add(Node("ddl", "sink", fn=lambda x: x), deps=(),
+          control_deps=("c",))
+    labels = {(e.src, e.dst): e.label for e in d.label_edges()}
+    assert labels[("c", "ddl")] == "control"
+    assert labels[("src", "a")] == "data"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 20))
+def test_random_dag_topological(n, extra):
+    """Property: random DAGs (edges only i->j, i<j) always get a valid
+    topological order."""
+    rng = np.random.default_rng(n * 101 + extra)
+    d = Dag()
+    for i in range(n):
+        d.add(Node(f"n{i}", "scan", cost_hint=float(rng.random())),
+              deps=tuple(f"n{j}" for j in range(i)
+                         if rng.random() < 0.3))
+    order = d.execution_order()
+    assert d.validate_topological(order)
+    assert len(order) == n
+
+
+# -- cost model ----------------------------------------------------------
+
+def test_cost_model_monotonic_rows():
+    p = OpProfile(flops_per_row=1e6, bytes_per_row=1e3, model_bytes=1e7)
+    assert op_cost(p, 10, "tpu") <= op_cost(p, 1000, "tpu")
+    assert op_cost(p, 10, "host") <= op_cost(p, 1000, "host")
+
+
+def test_device_choice_scales():
+    small = OpProfile(flops_per_row=1e4, bytes_per_row=64, model_bytes=1e5)
+    big = OpProfile(flops_per_row=2e9, bytes_per_row=4096, model_bytes=4e9)
+    assert choose_device(small, 10) == "host"
+    assert choose_device(big, 4096) == "tpu"
+
+
+def test_api_device_by_latency():
+    p = OpProfile(flops_per_row=1e12, bytes_per_row=1e6, model_bytes=8e10,
+                  api_latency_s=0.02)
+    # giant model, tiny batch: remote endpoint wins
+    assert choose_device(p, 1) == "api"
+
+
+def test_batch_size_tradeoff():
+    p = OpProfile(flops_per_row=2e7, bytes_per_row=1e5, model_bytes=1e8)
+    b = choose_batch_size(p, "tpu", mem_cap_bytes=4e6 + 1e8)
+    assert b <= 32  # memory cap binds
+    b2 = choose_batch_size(p, "tpu", mem_cap_bytes=1e12)
+    assert b2 >= b
+
+
+# -- batcher --------------------------------------------------------------
+
+def test_batched_equals_unbatched():
+    rng = np.random.default_rng(0)
+    W = rng.standard_normal((8, 4)).astype(np.float32)
+    rows = [rng.standard_normal(8).astype(np.float32) for _ in range(37)]
+    f = lambda x: x @ W
+    out1 = np.stack(run_batched(rows, f, batch_size=1))
+    out16 = np.stack(run_batched(rows, f, batch_size=16))
+    np.testing.assert_allclose(out1, out16, rtol=1e-6)
+
+
+def test_window_batcher_stats():
+    f = lambda x: x.sum(axis=1)
+    b = WindowBatcher(f, batch_size=8)
+    for i in range(20):
+        b.add(i, np.ones(4))
+    res = b.finish()
+    assert len(res) == 20
+    assert b.stats.batches == 3   # 8 + 8 + 4
+    assert b.stats.rows == 20
+
+
+# -- relational ops + sharing ---------------------------------------------
+
+def test_join_groupby_window():
+    left = {"k": np.array([1, 2, 2, 3]), "x": np.arange(4.0)}
+    right = {"k": np.array([2, 3, 4]), "y": np.array([10.0, 20.0, 30.0])}
+    j = join(left, right, "k")
+    assert len(j["k"]) == 3  # 2,2,3 match
+    g = groupby_agg(j, "k", "y", "mean")
+    assert dict(zip(g["k"], g["mean_y"])) == {2: 10.0, 3: 20.0}
+    w = window_op({"v": np.arange(10.0)}, "v", 3)
+    assert "mean3_v" in w
+
+
+def test_vector_share_cache_disk_tier(tmp_path):
+    calls = {"n": 0}
+
+    def embed(X):
+        calls["n"] += 1
+        return X @ np.ones((X.shape[1], 4), np.float32)
+
+    c1 = VectorShareCache(tmp_path)
+    X = np.ones((10, 8), np.float32)
+    c1.get_or_embed("t", "c", X, embed)
+    assert calls["n"] == 1
+    c1.get_or_embed("t", "c", X, embed)
+    assert calls["n"] == 1 and c1.hit_rate == 0.5
+    # new process (fresh cache) hits the disk tier
+    c2 = VectorShareCache(tmp_path)
+    c2.get_or_embed("t", "c", X, embed)
+    assert calls["n"] == 1
+
+
+def test_pipeline_chunked_matches_single_shot():
+    rng = np.random.default_rng(0)
+    n = 500
+    table = {"x": rng.standard_normal((n, 8)).astype(np.float32),
+             "v": rng.integers(0, 50, n)}
+    W = rng.standard_normal((8, 3)).astype(np.float32)
+
+    def predict(b):
+        out = dict(b)
+        out["p"] = (b["x"] @ W).sum(axis=1)
+        return out
+
+    d = Dag()
+    d.add(Node("src", "scan"))
+    d.add(Node("f", "filter",
+               fn=lambda b: filter_op(b, lambda x: x["v"] > 10)),
+          deps=("src",))
+    d.add(Node("p", "predict", fn=predict, cost_hint=5), deps=("f",))
+    ex = PipelineExecutor(d)
+    full = ex.execute({"src": table})["p"]
+    chunked = ex.execute_chunked("src", table, chunk_rows=64, sink_id="p")
+    np.testing.assert_allclose(np.sort(full["p"]), np.sort(chunked["p"]),
+                               rtol=1e-6)

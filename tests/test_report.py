@@ -1,0 +1,52 @@
+"""Roofline report aggregation over real dry-run artifacts."""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.report import load_records, markdown_table, roofline_row
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+pytestmark = pytest.mark.skipif(not ART.exists(),
+                                reason="run the dry-run sweep first")
+
+
+def test_all_cells_present():
+    singles = load_records(ART, "single")
+    multis = load_records(ART, "multi")
+    assert len(singles) == 33  # 10 archs x shapes, minus 7 long_500k skips
+    assert len(multis) == 33
+    archs = {r["arch"] for r in singles}
+    assert len(archs) == 10
+
+
+def test_rows_well_formed():
+    for rec in load_records(ART, "single"):
+        row = roofline_row(rec)
+        assert row["dominant"] in ("compute", "memory", "collective")
+        assert 0.0 <= row["roofline_fraction"] <= 1.0
+        assert row["compute_s"] >= 0 and row["memory_s"] > 0
+        # per-brief record contents
+        assert rec["memory_analysis"]["argument_size_in_bytes"] > 0
+        assert rec["collectives"]["collective_counts"], rec["arch"]
+
+
+def test_multi_pod_shards_the_pod_axis():
+    """Multi-pod per-device terms must drop vs single pod for train."""
+    singles = {(r["arch"], r["shape"]): r
+               for r in load_records(ART, "single")}
+    multis = {(r["arch"], r["shape"]): r
+              for r in load_records(ART, "multi")}
+    for key, s in singles.items():
+        if key[1] != "train_4k":
+            continue
+        m = multis[key]
+        assert m["flops_per_device"] < s["flops_per_device"] * 0.6, key
+        assert (m["memory_analysis"]["argument_size_in_bytes"]
+                < s["memory_analysis"]["argument_size_in_bytes"] * 0.75), key
+
+
+def test_markdown_table_renders():
+    rows = [roofline_row(r) for r in load_records(ART, "single")]
+    md = markdown_table(rows)
+    assert md.count("|") > 100 and "dominant" in md

@@ -1,0 +1,106 @@
+"""Model selection: NMF invariants (hypothesis), forest regressor,
+end-to-end two-phase selection beats random and approaches the oracle.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ModelSelector, RandomForestRegressor, RidgeRegressor,
+                        TaskFeaturizer, build_tasks, build_zoo,
+                        linear_probe_accuracy, nmf, reconstruction_error,
+                        selection_regret, transfer_matrix)
+from repro.core.task import TaskRegistry, TaskSpec
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 12), st.integers(4, 12), st.integers(1, 4))
+def test_nmf_invariants(m, n, k):
+    """W,H >= 0; loss non-increasing; low-rank matrices recovered."""
+    rng = np.random.default_rng(m * 31 + n)
+    Wt = rng.uniform(0.1, 1.0, (m, k)).astype(np.float32)
+    Ht = rng.uniform(0.1, 1.0, (n, k)).astype(np.float32)
+    V = Wt @ Ht.T
+    res = nmf(V, k, iters=400)
+    W, H = np.asarray(res.W), np.asarray(res.H)
+    assert (W >= 0).all() and (H >= 0).all()
+    losses = np.asarray(res.loss_curve)
+    assert losses[-1] <= losses[5] + 1e-5
+    assert reconstruction_error(V, res.W, res.H) < 1e-2
+
+
+def test_nmf_masked():
+    rng = np.random.default_rng(0)
+    V = rng.uniform(0.2, 1.0, (10, 12)).astype(np.float32)
+    mask = (rng.random((10, 12)) < 0.8).astype(np.float32)
+    res = nmf(V, 4, iters=500, mask=mask)
+    err = reconstruction_error(V, res.W, res.H, mask)
+    assert err < 0.05
+
+
+def test_forest_fits_nonlinear():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((300, 6)).astype(np.float32)
+    Y = np.stack([np.sin(X[:, 0]) + X[:, 1] ** 2,
+                  np.abs(X[:, 2])], axis=1).astype(np.float32)
+    rf = RandomForestRegressor(n_trees=24, max_depth=8, seed=0).fit(X, Y)
+    P = rf.predict(X)
+    r2 = 1 - ((P - Y) ** 2).sum() / ((Y - Y.mean(0)) ** 2).sum()
+    assert r2 > 0.6, r2
+    # forest must beat a linear model on this target
+    rr = RidgeRegressor(1e-2).fit(X, Y)
+    Pr = rr.predict(X)
+    r2_lin = 1 - ((Pr - Y) ** 2).sum() / ((Y - Y.mean(0)) ** 2).sum()
+    assert r2 > r2_lin
+
+
+@pytest.fixture(scope="module")
+def selection_world():
+    zoo = build_zoo(16, seed=0)
+    hist = build_tasks(40, seed=1)
+    V = transfer_matrix(zoo, hist)
+    fz = TaskFeaturizer()
+    feats = np.stack([fz.features(t.X, t.y) for t in hist])
+    targets = build_tasks(16, seed=99)
+    Vt = transfer_matrix(zoo, targets)
+    return zoo, hist, V, feats, targets, Vt
+
+
+def test_two_phase_selection_beats_random(selection_world):
+    zoo, hist, V, feats, targets, Vt = selection_world
+    sel = ModelSelector(k=6, n_anchors=4).fit_offline(V, feats, zoo=zoo)
+    regs, rand = [], []
+    rng = np.random.default_rng(5)
+    for j, t in enumerate(targets):
+        r = selection_regret(sel, Vt[:, j], t.X, t.y)
+        regs.append(r["regret"])
+        rand.append(Vt[:, j].max() - Vt[rng.integers(len(zoo)), j])
+    assert np.mean(regs) < np.mean(rand) * 0.75, (np.mean(regs),
+                                                  np.mean(rand))
+    assert np.mean(regs) < 0.08
+
+
+def test_online_selection_is_fast(selection_world):
+    zoo, hist, V, feats, targets, Vt = selection_world
+    sel = ModelSelector(k=6, n_anchors=2).fit_offline(V, feats, zoo=zoo)
+    rep = sel.select(targets[0].X, targets[0].y)
+    assert rep.online_ms < 200  # vs seconds for exhaustive evaluation
+    assert rep.scores.shape == (len(zoo),)
+
+
+def test_task_registry_resolution(selection_world):
+    zoo, hist, V, feats, targets, Vt = selection_world
+    sel = ModelSelector(k=6, n_anchors=2).fit_offline(V, feats, zoo=zoo)
+    reg = TaskRegistry(selector=sel, zoo=zoo)
+    reg.create_task(TaskSpec("sentiment", "series", ("POS", "NEG")))
+    with pytest.raises(ValueError):
+        reg.create_task(TaskSpec("sentiment", "series", ("POS", "NEG")))
+    t = targets[0]
+    idx = reg.resolve("sentiment", t.X, t.y)
+    assert 0 <= idx < len(zoo)
+    assert reg.resolve("sentiment", t.X, t.y) == idx  # cached
+    fn = reg.predict_fn("sentiment")
+    out = fn(t.X[:5])
+    assert out.shape[0] == 5
+    with pytest.raises(KeyError):
+        reg.resolve("nope", t.X, t.y)

@@ -1,0 +1,86 @@
+"""BLOB / decoupled / delta / API model stores + catalog."""
+import numpy as np
+import pytest
+
+from repro.storage import (ApiModelRegistry, BlobStore, Catalog,
+                           DecoupledStore, flatten_params, unflatten_like)
+
+
+@pytest.fixture
+def params():
+    rng = np.random.default_rng(0)
+    return {"embed": rng.standard_normal((16, 8)).astype(np.float32),
+            "layers": {"w1": rng.standard_normal((8, 8)).astype(np.float32),
+                       "b1": np.zeros(8, np.float32)}}
+
+
+def test_flatten_roundtrip(params):
+    flat = flatten_params(params)
+    assert set(flat) == {"embed", "layers/w1", "layers/b1"}
+    back = unflatten_like(params, flat)
+    np.testing.assert_array_equal(back["layers"]["w1"],
+                                  params["layers"]["w1"])
+
+
+def test_blob_store(tmp_path, params):
+    cat = Catalog(tmp_path / "cat")
+    bs = BlobStore(tmp_path / "blob", cat)
+    bs.save("m1", {"arch": "mlp", "layers": 1}, params,
+            task_types=["classification"])
+    arch, loaded = bs.load("m1", template=params)
+    assert arch["arch"] == "mlp"
+    np.testing.assert_array_equal(loaded["embed"], params["embed"])
+    assert cat.get_model("m1").storage == "blob"
+    assert cat.get_model("m1").param_count == 16 * 8 + 64 + 8
+
+
+def test_decoupled_partial_and_delta(tmp_path, params):
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat)
+    ds.save("base", {"arch": "mlp"}, params)
+    base_bytes = ds.stored_bytes("base")
+
+    ft = {"embed": params["embed"],
+          "layers": {"w1": params["layers"]["w1"] + 1.0,
+                     "b1": params["layers"]["b1"]}}
+    ds.save("ft", {"arch": "mlp"}, ft, base_model="base")
+    assert ds.stored_bytes("ft") < base_bytes / 2  # only w1 rewritten
+
+    _, loaded = ds.load("ft", template=ft)
+    np.testing.assert_array_equal(loaded["layers"]["w1"],
+                                  ft["layers"]["w1"])
+    np.testing.assert_array_equal(loaded["embed"], params["embed"])
+
+    # partial load: just the embedding layer
+    _, some = ds.load("ft", layer_filter=lambda n: n == "embed")
+    assert list(some) == ["embed"]
+
+    # range read within a layer
+    rows = ds.load_layer_rows("ft", "embed", 4, 9)
+    np.testing.assert_array_equal(rows, params["embed"][4:9])
+
+
+def test_api_registry_retry_cache_quota():
+    reg = ApiModelRegistry()
+    calls = {"n": 0}
+
+    def fn(x):
+        calls["n"] += 1
+        return np.asarray(x) * 2
+
+    reg.register("gpt-sim", fn, latency_s=0.001, failure_rate=0.5,
+                 max_retries=10, quota=50)
+    rng = np.random.default_rng(0)
+    out = reg.invoke("gpt-sim", np.ones(3), rng)
+    np.testing.assert_array_equal(out, 2 * np.ones(3))
+    # cache hit: second identical call doesn't re-invoke
+    n = calls["n"]
+    reg.invoke("gpt-sim", np.ones(3), rng)
+    assert calls["n"] == n
+    assert reg.stats["gpt-sim"]["cache_hits"] == 1
+
+    reg.register("tiny", fn, latency_s=0.001, quota=2, cache=False)
+    reg.invoke("tiny", np.ones(1), rng)
+    reg.invoke("tiny", np.ones(2), rng)
+    with pytest.raises(RuntimeError, match="quota"):
+        reg.invoke("tiny", np.ones(4), rng)

@@ -1,0 +1,124 @@
+"""End-to-end behaviour: the task-centric flow of the paper —
+CREATE TASK -> select model -> store/load via Mvec -> DAG query with
+batched inference + vector sharing -> results; plus a train->checkpoint->
+serve round trip on a reduced arch.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core import (ModelSelector, TaskFeaturizer, TaskRegistry,
+                        TaskSpec, build_tasks, build_zoo, transfer_matrix)
+from repro.models import build_model, make_batch
+from repro.pipeline import (Dag, Node, PipelineExecutor, VectorShareCache,
+                            filter_op, groupby_agg)
+from repro.storage import (BlobStore, Catalog, CheckpointManager,
+                           DecoupledStore)
+from repro.training import OptimizerConfig, init_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    td = tmp_path_factory.mktemp("world")
+    zoo = build_zoo(12, seed=0)
+    hist = build_tasks(24, seed=1)
+    V = transfer_matrix(zoo, hist)
+    fz = TaskFeaturizer()
+    feats = np.stack([fz.features(t.X, t.y) for t in hist])
+    sel = ModelSelector(k=5, n_anchors=2, nmf_iters=200).fit_offline(
+        V, feats, zoo=zoo)
+    return td, zoo, sel
+
+
+def test_task_centric_query_end_to_end(world):
+    """The paper's Table-1 task-centric query, mechanically:
+    SELECT gender, AVG(sentiment(comment)) ... GROUP BY gender."""
+    td, zoo, sel = world
+    reg = TaskRegistry(selector=sel, zoo=zoo)
+    reg.create_task(TaskSpec("sentiment", "series", ("POS", "NEG")))
+
+    rng = np.random.default_rng(0)
+    n = 400
+    from repro.core.zoo import make_task
+    sample = make_task(rng, "gauss", n=64, dim=16)
+    reg.resolve("sentiment", sample.X, sample.y)
+    predict = reg.predict_fn("sentiment")
+
+    reviews = {"uid": rng.integers(0, 40, n),
+               "gender": rng.integers(0, 2, n),
+               "len": rng.integers(1, 200, n),
+               "emb": rng.standard_normal((n, 16)).astype(np.float32)}
+
+    cache = VectorShareCache(td / "cache")
+
+    def embed_node(b):
+        out = dict(b)
+        out["feat"] = cache.get_or_embed("reviews", "emb", b["emb"],
+                                         predict)
+        return out
+
+    def score_node(b):
+        out = dict(b)
+        out["sentiment"] = b["feat"].mean(axis=1)
+        return out
+
+    dag = Dag()
+    dag.add(Node("reviews", "scan"))
+    dag.add(Node("flt", "filter",
+                 fn=lambda b: filter_op(b, lambda x: x["len"] > 10)),
+            deps=("reviews",))
+    dag.add(Node("emb", "embed", fn=embed_node, cost_hint=5), deps=("flt",))
+    dag.add(Node("pred", "predict", fn=score_node, cost_hint=2),
+            deps=("emb",))
+    dag.add(Node("agg", "groupby",
+                 fn=lambda b: groupby_agg(b, "gender", "sentiment")),
+            deps=("pred",))
+    ex = PipelineExecutor(dag)
+    res = ex.execute({"reviews": reviews})
+    assert set(res["agg"]["gender"]) <= {0, 1}
+    assert np.all(np.isfinite(res["agg"]["mean_sentiment"]))
+    # re-running the query reuses the shared embedding
+    ex.execute({"reviews": reviews})
+    assert cache.stats.hits >= 1
+
+
+def test_zoo_model_roundtrip_through_stores(world):
+    td, zoo, sel = world
+    cat = Catalog(td / "cat")
+    blob = BlobStore(td / "blob", cat)
+    dec = DecoupledStore(td / "dec", cat)
+    m = zoo[0]
+    params = {"W": m.W}
+    blob.save(m.name, {"mode": m.mode}, params)
+    arch, loaded = blob.load(m.name, template=params)
+    np.testing.assert_array_equal(loaded["W"], m.W)
+    dec.save(m.name + "-dec", {"mode": m.mode}, params)
+    _, loaded2 = dec.load(m.name + "-dec", template=params)
+    np.testing.assert_array_equal(loaded2["W"], m.W)
+    kinds = {i.storage for i in cat.list_models()}
+    assert {"blob", "decoupled"} <= kinds
+
+
+def test_train_checkpoint_serve_roundtrip(tmp_path):
+    """Reduced LM: train 8 steps, checkpoint, restore, decode greedily."""
+    cfg = smoke_config("h2o-danube-1.8b").replace(num_layers=2)
+    m = build_model(cfg, attn_impl="naive")
+    params = m.init(jax.random.PRNGKey(0))
+    opt = init_state(params)
+    step = jax.jit(make_train_step(m, OptimizerConfig(learning_rate=1e-3)))
+    batch = make_batch(cfg, ShapeConfig("s", 32, 4, "train"))
+    for _ in range(8):
+        params, opt, out = step(params, opt, batch)
+    cm = CheckpointManager(tmp_path)
+    cm.save(8, {"params": params})
+    got, s = cm.restore({"params": params})
+    restored = jax.tree.map(jnp.asarray, got["params"])
+    tokens = batch["tokens"][:, :16]
+    _, state = m.prefill(params, tokens, max_len=20)
+    l1, _ = m.decode_step(params, state, tokens[:, -1:])
+    _, state2 = m.prefill(restored, tokens, max_len=20)
+    l2, _ = m.decode_step(restored, state2, tokens[:, -1:])
+    assert float(jnp.abs(l1 - l2).max()) < 2e-6
