@@ -7,7 +7,7 @@ import numpy as np
 
 from benchmarks.common import emit, emit_value, timeit
 from repro.pipeline import (Dag, Node, OpProfile, PipelineExecutor,
-                            VectorShareCache, filter_op, join,
+                            VectorShareCache, filter_op, join, place_dag,
                             simd_normalize_embed)
 
 
@@ -63,12 +63,11 @@ def run() -> None:
 
     # Fig 13a: heavy image model vs lightweight text model — the cost model
     # should split them across devices (paper: GPU image / CPU text).
-    ex = PipelineExecutor(build(False), workers=4, profiles={
+    placement = place_dag(build(False), {
         "ie": OpProfile(flops_per_row=2 * 600e6, bytes_per_row=768 * 4,
                         model_bytes=25e6 * 4),
         "te": OpProfile(flops_per_row=2 * 256 * 3, bytes_per_row=256 * 4,
-                        model_bytes=256 * 3 * 4)})
-    placement = ex.place(nrows_hint=3000)
+                        model_bytes=256 * 3 * 4)}, nrows_hint=3000)
     hetero = placement["ie"] != placement["te"]
     emit_value("sharing.heterogeneous_placement", 1.0 if hetero else 0.0,
                f"img->{placement['ie']} txt->{placement['te']} (Fig 13a)")

@@ -17,6 +17,7 @@ MODULES = [
     "bench_placement",   # Figs 11-12
     "bench_batchsize",   # Table 3
     "bench_sharing",     # Fig 13
+    "bench_engine",      # ours: end-to-end engine vs per-row inference
     "bench_roofline",    # ours: §Roofline summary
 ]
 

@@ -1,6 +1,7 @@
-"""Table-1 demo: the task-centric SQL surface.
+"""Table-1 demo: the task-centric SQL surface, as a thin client of the
+query engine (`repro.engine.MorphingSession`).
 
-A minimal SQL-ish parser for the paper's two statements:
+The paper's two statements:
 
   CREATE TASK sentiment_classifier (INPUT=Series, OUTPUT IN ('POS','NEG'),
       TYPE='Classification');
@@ -8,78 +9,17 @@ A minimal SQL-ish parser for the paper's two statements:
       WHERE len > 20 GROUP BY gender;
 
 vs. the model-centric equivalent where the user must pick
-TextCNNForSentiAnalysisV_2_0 themselves. Run:
+TextCNNForSentiAnalysisV_2_0 themselves. The session resolves the task to
+a model through the transferability subspace, persists it through the
+BLOB store + catalog, pre-embeds via the vector-share cache, window-
+batches the inference, and streams chunks through the DAG runtime. Run:
   PYTHONPATH=src python examples/task_centric_sql.py
 """
-import re
-
 import numpy as np
 
-from repro.core import (ModelSelector, TaskFeaturizer, TaskRegistry,
-                        TaskSpec, build_tasks, build_zoo, make_task,
-                        transfer_matrix)
-from repro.pipeline import Dag, Node, PipelineExecutor, filter_op, groupby_agg
-
-CREATE_RE = re.compile(
-    r"CREATE\s+TASK\s+(\w+)\s*\(\s*INPUT\s*=\s*(\w+)\s*,\s*OUTPUT\s+IN\s*"
-    r"\(([^)]*)\)\s*,\s*TYPE\s*=\s*'(\w+)'\s*\)", re.I)
-SELECT_RE = re.compile(
-    r"SELECT\s+(\w+)\s*,\s*AVG\(\s*(\w+)\((\w+)\)\s*\)\s+FROM\s+(\w+)"
-    r"(?:\s+WHERE\s+(\w+)\s*>\s*(\d+))?\s+GROUP\s+BY\s+(\w+)", re.I)
-
-
-class MiniSQL:
-    """Executes the paper's task-centric statements over columnar tables."""
-
-    def __init__(self, registry: TaskRegistry):
-        self.registry = registry
-        self.tables = {}
-
-    def register_table(self, name, table):
-        self.tables[name] = table
-
-    def execute(self, sql: str, sample=None):
-        sql = sql.strip().rstrip(";")
-        m = CREATE_RE.match(sql)
-        if m:
-            name, inp, outs, kind = m.groups()
-            labels = tuple(s.strip().strip("'\"")
-                           for s in outs.split(","))
-            self.registry.create_task(TaskSpec(name, inp.lower(), labels,
-                                               kind.lower()))
-            return f"TASK {name} CREATED"
-        m = SELECT_RE.match(sql)
-        if m:
-            group_col, task, col, table, wcol, wval, gcol2 = m.groups()
-            if task not in [t.name for t in self.registry.list_tasks()]:
-                raise ValueError(f"unknown task {task}")
-            if sample is not None:
-                self.registry.resolve(task, *sample)
-            predict = self.registry.predict_fn(task)
-            tbl = self.tables[table]
-
-            def predict_node(b):
-                out = dict(b)
-                out["_score"] = predict(b[col]).mean(axis=1)
-                return out
-
-            dag = Dag()
-            dag.add(Node(table, "scan"))
-            prev = table
-            if wcol:
-                dag.add(Node("where", "filter",
-                             fn=lambda b: filter_op(
-                                 b, lambda x: x[wcol] > int(wval))),
-                        deps=(prev,))
-                prev = "where"
-            dag.add(Node("pred", "predict", fn=predict_node, cost_hint=5),
-                    deps=(prev,))
-            dag.add(Node("agg", "groupby",
-                         fn=lambda b: groupby_agg(b, group_col, "_score")),
-                    deps=("pred",))
-            res = PipelineExecutor(dag).execute({table: tbl})
-            return res["agg"]
-        raise ValueError(f"unsupported statement: {sql[:50]}")
+from repro.core import (ModelSelector, TaskFeaturizer, build_tasks,
+                        build_zoo, make_task, transfer_matrix)
+from repro.engine import MorphingSession
 
 
 def main() -> None:
@@ -89,8 +29,8 @@ def main() -> None:
     fz = TaskFeaturizer()
     feats = np.stack([fz.features(t.X, t.y) for t in history])
     sel = ModelSelector(k=6, n_anchors=3).fit_offline(V, feats, zoo=zoo)
-    db = MiniSQL(TaskRegistry(selector=sel, zoo=zoo))
 
+    db = MorphingSession(selector=sel, zoo=zoo)
     rng = np.random.default_rng(0)
     n = 600
     db.register_table("reviews", {
@@ -98,19 +38,31 @@ def main() -> None:
         "len": rng.integers(1, 200, n),
         "emb": rng.standard_normal((n, 16)).astype(np.float32)})
 
-    print(db.execute(
+    print(db.sql(
         "CREATE TASK sentiment_classifier (INPUT=Series, "
         "OUTPUT IN ('POS','NEG','NEU'), TYPE='Classification');"))
 
     sample = make_task(rng, "gauss", n=128, dim=16, classes=3)
-    out = db.execute(
+    res = db.sql(
         "SELECT gender, AVG(sentiment_classifier(emb)) FROM reviews "
         "WHERE len > 20 GROUP BY gender;",
         sample=(sample.X, sample.y))
-    chosen = db.registry._resolution["sentiment_classifier"]
-    print(f"(system resolved sentiment_classifier -> {zoo[chosen].name})")
-    for g, s in zip(out["gender"], out["mean__score"]):
+    rep = res.report
+    print(f"(system resolved sentiment_classifier -> "
+          f"{rep.resolution['sentiment_classifier']})")
+    for g, s in zip(res.rows["gender"], res.rows["mean__score"]):
         print(f"  gender={g}: AVG(sentiment)={s:+.4f}")
+    print(f"(plan: {rep.plan})")
+    print(f"(rows {rep.rows_in} -> {rep.rows_out}, "
+          f"batches={rep.batch_batches}, "
+          f"share {rep.share_hits}h/{rep.share_misses}m)")
+
+    # the same query again: pre-embeddings come back from the share cache
+    res2 = db.sql(
+        "SELECT gender, AVG(sentiment_classifier(emb)) FROM reviews "
+        "WHERE len > 20 GROUP BY gender;")
+    print(f"(second run share hit rate: "
+          f"{res2.report.share_hit_rate:.2f})")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,28 @@
 """repro: MorphingDB (task-centric AI-native DBMS) as a multi-pod JAX
-training/serving framework. See DESIGN.md and EXPERIMENTS.md."""
-__version__ = "1.0.0"
+training/serving framework. See DESIGN.md and EXPERIMENTS.md.
+
+Module map (query path top-down):
+
+- ``engine``    — the task-centric query engine: MiniSQL parser, logical
+  plan IR + optimizer (predicate pushdown, embed insertion, Eq. 10/11
+  placement + batch annotation), and the ``MorphingSession`` facade that
+  resolves tasks to models and executes compiled plans.
+- ``core``      — task-centric model selection: NMF transferability
+  subspace, two-phase ``ModelSelector``, ``TaskRegistry``, and the mini
+  zoo/transfer substrate that validates it.
+- ``pipeline``  — execution substrate: operator ``Dag`` (Algorithm 1),
+  cost model (Eq. 5-11, ``place_dag``), columnar operators, window /
+  continuous batchers, ``VectorShareCache`` pre-embedding, and the pure
+  runtime ``PipelineExecutor`` (wave + chunked overlap execution).
+- ``storage``   — model stores (BLOB / decoupled layer tables / API
+  endpoints), the JSON system catalog, the Mvec tensor format, and
+  distributed checkpointing.
+- ``models``    — JAX model zoo: transformer, enc-dec, MoE, Mamba-2,
+  RG-LRU, attention variants.
+- ``kernels``   — Pallas TPU kernels (fused embed, attention, scans).
+- ``training``  / ``distributed`` / ``launch`` — multi-pod training,
+  sharding, serving entry points.
+- ``analysis``  — FLOPs/HLO cost analysis and experiment reports.
+- ``data`` / ``configs`` — input pipelines and model configs.
+"""
+__version__ = "1.1.0"

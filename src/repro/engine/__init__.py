@@ -1,0 +1,20 @@
+"""Task-centric query engine: SQL -> logical plan -> optimizer ->
+annotated DAG -> chunked pipeline runtime, with model resolution through
+the selection subspace + storage catalog and pre-embedding via the
+vector-share cache. `MorphingSession` is the single entry point.
+"""
+from repro.engine.plan import (CompileContext, LogicalPlan, PlanNode,
+                               annotate_plan, compile_plan, insert_embeds,
+                               optimize, push_down_filters)
+from repro.engine.session import (MorphingSession, QueryReport, QueryResult,
+                                  ResolvedModel)
+from repro.engine.sql import (CreateTaskStmt, QueryStmt, SelectItem,
+                              TaskCall, parse, tokenize)
+
+__all__ = [
+    "CompileContext", "LogicalPlan", "PlanNode", "annotate_plan",
+    "compile_plan", "insert_embeds", "optimize", "push_down_filters",
+    "MorphingSession", "QueryReport", "QueryResult", "ResolvedModel",
+    "CreateTaskStmt", "QueryStmt", "SelectItem", "TaskCall", "parse",
+    "tokenize",
+]

@@ -1,0 +1,343 @@
+"""Logical plan IR + optimizer for the task-centric query engine.
+
+A :class:`LogicalPlan` is an ordered chain of operators over one table
+(the SQL subset the engine speaks is single-table):
+
+    scan -> [filter|project|embed|predict]* -> [agg]
+
+The optimizer runs three passes before lowering to a `repro.pipeline.Dag`:
+
+1. **Predicate pushdown** — filters that only reference base columns are
+   moved below `predict`/`embed` nodes so inference never runs on rows a
+   WHERE clause would discard.
+2. **Embed insertion** (paper §5.1 pre-embedding) — each `predict` is
+   split into an `embed` node (the expensive feature extraction, routed
+   through :class:`~repro.pipeline.share.VectorShareCache` so repeated
+   queries over the same data reuse stored vectors) and a cheap head-only
+   `predict`.
+3. **Placement + batch annotation** (paper Eq. 10/11) — each inference
+   node is annotated with the cost-model device and batch size; the
+   executor is a pure runtime and only reads the annotations.
+
+Lowering (:func:`compile_plan`) binds operator closures: `embed` nodes go
+through the share cache with a :class:`~repro.pipeline.batcher.WindowBatcher`
+inside (window aggregation -> one batched device call), `filter` nodes
+evaluate conjunctive predicates, and the final `agg` is *not* streamed —
+the session applies it after chunks are concatenated so grouped results
+are exact under chunked execution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.pipeline.batcher import BatcherStats, WindowBatcher
+from repro.pipeline.cost import (OpProfile, choose_batch_size, choose_device)
+from repro.pipeline.dag import Dag, Node
+from repro.pipeline.operators import Batch, filter_op
+
+# predicate operators for conjunctive WHERE clauses
+_CMP: Dict[str, Callable[[np.ndarray, Any], np.ndarray]] = {
+    ">": lambda c, v: c > v,
+    ">=": lambda c, v: c >= v,
+    "<": lambda c, v: c < v,
+    "<=": lambda c, v: c <= v,
+    "=": lambda c, v: c == v,
+    "!=": lambda c, v: c != v,
+}
+
+
+@dataclass
+class PlanNode:
+    op: str                      # scan | filter | project | embed
+    #                            # | predict | agg
+    args: Dict[str, Any] = field(default_factory=dict)
+
+    def describe(self) -> str:
+        a = self.args
+        if self.op == "scan":
+            return f"scan({a['table']})"
+        if self.op == "filter":
+            preds = " AND ".join(f"{c}{o}{v!r}" for c, o, v in a["preds"])
+            return f"filter({preds})"
+        if self.op == "project":
+            return f"project({', '.join(a['cols'])})"
+        if self.op == "embed":
+            dev = a.get("device", "?")
+            bs = a.get("batch_size", "?")
+            return (f"embed({a['task']}.{a['col']} -> {a['out']} "
+                    f"@{dev} b={bs} shared)")
+        if self.op == "predict":
+            dev = a.get("device", "?")
+            head = " head" if a.get("head_only") else ""
+            return f"predict({a['task']}({a['col']}) -> {a['out']} @{dev}{head})"
+        if self.op == "agg":
+            g = a.get("group_by")
+            s = ", ".join(f"{agg}({c})" for c, agg, _ in a["specs"])
+            return f"agg({s}{' GROUP BY ' + g if g else ''})"
+        return self.op
+
+
+@dataclass
+class LogicalPlan:
+    nodes: List[PlanNode] = field(default_factory=list)
+
+    # -- builder ---------------------------------------------------------
+    @staticmethod
+    def scan(table: str) -> "LogicalPlan":
+        return LogicalPlan([PlanNode("scan", {"table": table})])
+
+    def filter(self, preds: Sequence[Tuple[str, str, Any]]) -> "LogicalPlan":
+        self.nodes.append(PlanNode("filter", {"preds": list(preds)}))
+        return self
+
+    def project(self, cols: Sequence[str]) -> "LogicalPlan":
+        self.nodes.append(PlanNode("project", {"cols": list(cols)}))
+        return self
+
+    def predict(self, task: str, col: str,
+                out: Optional[str] = None) -> "LogicalPlan":
+        self.nodes.append(PlanNode("predict", {
+            "task": task, "col": col, "out": out or "_score"}))
+        return self
+
+    def agg(self, group_by: Optional[str],
+            specs: Sequence[Tuple[str, str, str]]) -> "LogicalPlan":
+        self.nodes.append(PlanNode("agg", {"group_by": group_by,
+                                           "specs": list(specs)}))
+        return self
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def table(self) -> str:
+        return self.nodes[0].args["table"]
+
+    def describe(self) -> str:
+        return " -> ".join(n.describe() for n in self.nodes)
+
+    def ops(self) -> List[str]:
+        return [n.op for n in self.nodes]
+
+
+# ---------------------------------------------------------------------------
+# Optimizer passes
+# ---------------------------------------------------------------------------
+
+def _produced_columns(node: PlanNode) -> List[str]:
+    if node.op in ("embed", "predict"):
+        return [node.args["out"]]
+    return []
+
+
+def push_down_filters(plan: LogicalPlan) -> LogicalPlan:
+    """Move filters below embed/predict nodes whose outputs they don't
+    reference (classic predicate pushdown: don't infer on rows WHERE
+    would drop)."""
+    nodes = list(plan.nodes)
+    moved = True
+    while moved:
+        moved = False
+        for i in range(1, len(nodes)):
+            if nodes[i].op != "filter":
+                continue
+            above = nodes[i - 1]
+            if above.op not in ("embed", "predict", "project"):
+                continue
+            pred_cols = {c for c, _, _ in nodes[i].args["preds"]}
+            if above.op == "project":
+                # projection only narrows columns; filter needs them upstream
+                if not pred_cols <= set(above.args["cols"]):
+                    continue
+            elif pred_cols & set(_produced_columns(above)):
+                continue  # filter reads the inference output: can't move
+            nodes[i - 1], nodes[i] = nodes[i], nodes[i - 1]
+            moved = True
+    plan.nodes = nodes
+    return plan
+
+
+def insert_embeds(plan: LogicalPlan) -> LogicalPlan:
+    """Split each full `predict` into `embed` (expensive features, served
+    through the vector-share cache) + head-only `predict`."""
+    out: List[PlanNode] = []
+    for node in plan.nodes:
+        if node.op == "predict" and not node.args.get("head_only"):
+            task, col = node.args["task"], node.args["col"]
+            emb_col = f"__emb_{task}_{col}"
+            out.append(PlanNode("embed", {
+                "task": task, "col": col, "out": emb_col}))
+            out.append(PlanNode("predict", {
+                "task": task, "col": emb_col, "out": node.args["out"],
+                "head_only": True}))
+        else:
+            out.append(node)
+    plan.nodes = out
+    return plan
+
+
+def annotate_plan(plan: LogicalPlan, profiles: Dict[str, OpProfile],
+                  nrows_hint: int = 1024, devices=("host", "tpu"),
+                  mem_cap_bytes: float = 2e9) -> LogicalPlan:
+    """Plan-time device placement (Eq. 10) and batch-size selection
+    (Eq. 11). ``profiles`` maps task name -> OpProfile of the resolved
+    model. Head-only predicts are O(rows) host work."""
+    for node in plan.nodes:
+        if node.op == "embed" or (node.op == "predict"
+                                  and not node.args.get("head_only")):
+            prof = profiles.get(node.args["task"])
+            if prof is None:
+                node.args.setdefault("device", "host")
+                node.args.setdefault("batch_size", 32)
+                continue
+            dev = choose_device(prof, nrows_hint, devices)
+            node.args["device"] = dev
+            node.args["batch_size"] = choose_batch_size(
+                prof, dev, mem_cap_bytes=mem_cap_bytes)
+        elif node.op == "predict":
+            node.args["device"] = "host"
+    return plan
+
+
+def optimize(plan: LogicalPlan, profiles: Dict[str, OpProfile],
+             nrows_hint: int = 1024, devices=("host", "tpu")) -> LogicalPlan:
+    plan = push_down_filters(plan)
+    plan = insert_embeds(plan)
+    # pushdown again: embed insertion may leave a filter above an embed
+    plan = push_down_filters(plan)
+    return annotate_plan(plan, profiles, nrows_hint, devices)
+
+
+# ---------------------------------------------------------------------------
+# Lowering: LogicalPlan -> pipeline Dag
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CompileContext:
+    """Runtime bindings the lowered DAG closes over."""
+    models: Dict[str, Any]                  # task -> ResolvedModel
+    share: Optional[Any] = None             # VectorShareCache
+    batcher_stats: Dict[str, BatcherStats] = field(default_factory=dict)
+    share_version_of: Dict[str, str] = field(default_factory=dict)
+
+
+def _make_pred(preds: Sequence[Tuple[str, str, Any]]):
+    def pred(b: Batch) -> np.ndarray:
+        mask = None
+        for col, op, val in preds:
+            m = _CMP[op](b[col], val)
+            mask = m if mask is None else (mask & m)
+        return mask
+    return pred
+
+
+def _batched_features(model, batch_size: int,
+                      stats: BatcherStats) -> Callable:
+    """Wrap a model's feature fn in a WindowBatcher: rows are aggregated
+    into windows and run as one device call each (paper §5.2 batch
+    inference), accumulating stats across chunks."""
+    def run(X: np.ndarray) -> np.ndarray:
+        if len(X) == 0:
+            # empty chunk: keep the true feature width so cross-chunk
+            # concatenation stays shape-consistent
+            return np.asarray(model.features(X))
+        wb = WindowBatcher(model.features, batch_size=batch_size,
+                           convert_workers=1)
+        for i in range(len(X)):
+            wb.add(i, X[i])
+        res = wb.finish()
+        stats.batches += wb.stats.batches
+        stats.rows += wb.stats.rows
+        stats.infer_seconds += wb.stats.infer_seconds
+        stats.convert_seconds += wb.stats.convert_seconds
+        return np.stack([np.asarray(res[i]) for i in range(len(X))])
+    return run
+
+
+def compile_plan(plan: LogicalPlan, ctx: CompileContext,
+                 workers_hint: int = 4) -> Tuple[Dag, str, str,
+                                                 Optional[PlanNode]]:
+    """Lower to a Dag. Returns (dag, source_id, sink_id, agg_node);
+    ``agg_node`` (if any) is applied by the caller *after* chunked
+    results are concatenated, so grouped aggregates stay exact."""
+    dag = Dag()
+    table = plan.table
+    dag.add(Node(table, "scan"))
+    prev = table
+    agg_node: Optional[PlanNode] = None
+    counters: Dict[str, int] = {}
+
+    def fresh(opname: str) -> str:
+        counters[opname] = counters.get(opname, 0) + 1
+        n = counters[opname]
+        return opname if n == 1 else f"{opname}{n}"
+
+    for node in plan.nodes[1:]:
+        if node.op == "agg":
+            agg_node = node
+            continue
+        if node.op == "filter":
+            op_id = fresh("filter")
+            pred = _make_pred(node.args["preds"])
+            dag.add(Node(op_id, "filter",
+                         fn=(lambda p: lambda b: filter_op(b, p))(pred)),
+                    deps=(prev,))
+        elif node.op == "project":
+            op_id = fresh("project")
+            cols = list(node.args["cols"])
+            dag.add(Node(op_id, "project",
+                         fn=(lambda cs: lambda b: {k: b[k] for k in cs
+                                                   if k in b})(cols)),
+                    deps=(prev,))
+        elif node.op == "embed":
+            op_id = fresh("embed")
+            task = node.args["task"]
+            model = ctx.models[task]
+            bs = int(node.args.get("batch_size", 32))
+            stats = ctx.batcher_stats.setdefault(task, BatcherStats())
+            feat = _batched_features(model, bs, stats)
+            col, out = node.args["col"], node.args["out"]
+            version = ctx.share_version_of.get(task, "v1")
+
+            def embed_fn(b, _c=col, _o=out, _f=feat, _v=version, _t=table):
+                res = dict(b)
+                if ctx.share is not None and len(b[_c]):
+                    res[_o] = ctx.share.get_or_embed(_t, _c, b[_c], _f,
+                                                     version=_v)
+                else:
+                    res[_o] = _f(b[_c])
+                return res
+
+            dag.add(Node(op_id, "embed", fn=embed_fn,
+                         cost_hint=8.0,
+                         device=node.args.get("device", "host")),
+                    deps=(prev,))
+        elif node.op == "predict":
+            op_id = fresh("predict")
+            task = node.args["task"]
+            model = ctx.models[task]
+            col, out = node.args["col"], node.args["out"]
+            if node.args.get("head_only"):
+                def pred_fn(b, _c=col, _o=out, _m=model):
+                    res = dict(b)
+                    res[_o] = _m.head(b[_c])
+                    return res
+                cost = 1.0
+            else:
+                bs = int(node.args.get("batch_size", 32))
+                stats = ctx.batcher_stats.setdefault(task, BatcherStats())
+                feat = _batched_features(model, bs, stats)
+
+                def pred_fn(b, _c=col, _o=out, _m=model, _f=feat):
+                    res = dict(b)
+                    res[_o] = _m.head(_f(b[_c]))
+                    return res
+                cost = 8.0
+            dag.add(Node(op_id, "predict", fn=pred_fn, cost_hint=cost,
+                         device=node.args.get("device", "host")),
+                    deps=(prev,))
+        else:
+            raise ValueError(f"cannot lower plan op {node.op}")
+        prev = op_id
+    return dag, table, prev, agg_node

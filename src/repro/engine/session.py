@@ -1,0 +1,230 @@
+"""MorphingSession: the task-centric query engine facade.
+
+One object owns the whole paper pipeline: registered tables, CREATE TASK
+specs, model resolution through the transferability-subspace selector
+*and* the storage catalog (the chosen model's weights round-trip through
+the BLOB store rather than living in Python memory), a shared
+pre-embedding cache, and compiled plan execution on the chunked pipeline
+runtime. Every query returns its rows plus a :class:`QueryReport` that
+merges `ExecStats` / `ShareStats` / `BatcherStats` into one telemetry
+view.
+
+    sess = MorphingSession(selector=sel, zoo=zoo)
+    sess.register_table("reviews", {...})
+    sess.sql("CREATE TASK sentiment (INPUT=Series, OUTPUT IN ('P','N'), "
+             "TYPE='Classification')")
+    sess.resolve_task("sentiment", X_sample, y_sample)
+    res = sess.sql("SELECT gender, AVG(sentiment(emb)) FROM reviews "
+                   "WHERE len > 20 GROUP BY gender")
+    res.rows, res.report.share_hit_rate, res.report.device_of
+"""
+from __future__ import annotations
+
+import tempfile
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.task import TaskRegistry, TaskSpec
+from repro.core.zoo import ZooModel
+from repro.engine.plan import (CompileContext, LogicalPlan, compile_plan,
+                               optimize)
+from repro.engine.sql import CreateTaskStmt, QueryStmt, parse
+from repro.pipeline.batcher import BatcherStats
+from repro.pipeline.cost import OpProfile, profile_for_model
+from repro.pipeline.operators import (Batch, aggregate, batch_len,
+                                      groupby_aggs)
+from repro.pipeline.scheduler import PipelineExecutor
+from repro.pipeline.share import VectorShareCache
+from repro.storage.catalog import Catalog
+from repro.storage.stores import BlobStore
+
+
+@dataclass
+class ResolvedModel:
+    """A task's model, loaded back through the BLOB store."""
+    task: str
+    model_id: str
+    version: str
+    features: Callable[[np.ndarray], np.ndarray]   # expensive extractor
+    head: Callable[[np.ndarray], np.ndarray]       # cheap score head
+    profile: OpProfile
+
+
+@dataclass
+class QueryReport:
+    """Per-query telemetry: executor + share cache + batcher, merged."""
+    sql: str = ""
+    plan: str = ""
+    resolution: Dict[str, str] = field(default_factory=dict)
+    wall_seconds: float = 0.0
+    rows_in: int = 0
+    rows_out: int = 0
+    op_seconds: Dict[str, float] = field(default_factory=dict)
+    device_of: Dict[str, str] = field(default_factory=dict)
+    batch_size_of: Dict[str, int] = field(default_factory=dict)
+    share_hits: int = 0
+    share_misses: int = 0
+    batch_batches: int = 0
+    batch_rows: int = 0
+    batch_infer_seconds: float = 0.0
+
+    @property
+    def share_hit_rate(self) -> float:
+        t = self.share_hits + self.share_misses
+        return self.share_hits / t if t else 0.0
+
+
+@dataclass
+class QueryResult:
+    rows: Batch
+    report: QueryReport
+
+
+class MorphingSession:
+    """Register tables -> create tasks -> resolve models -> run SQL."""
+
+    def __init__(self, selector=None, zoo: Optional[List[ZooModel]] = None,
+                 root: Optional[Path] = None, *,
+                 devices: Tuple[str, ...] = ("host", "tpu"),
+                 chunk_rows: int = 256, max_inflight: int = 3,
+                 workers: int = 4, optimize_plans: bool = True,
+                 share_capacity_bytes: int = 1 << 30):
+        self.root = Path(root) if root else Path(
+            tempfile.mkdtemp(prefix="morphingdb-"))
+        self.catalog = Catalog(self.root / "catalog")
+        self.blobs = BlobStore(self.root / "models", self.catalog)
+        self.share = VectorShareCache(self.root / "share",
+                                      capacity_bytes=share_capacity_bytes)
+        self.registry = TaskRegistry(selector=selector, zoo=zoo)
+        self.zoo = zoo or []
+        self.devices = devices
+        self.chunk_rows = chunk_rows
+        self.max_inflight = max_inflight
+        self.workers = workers
+        self.optimize_plans = optimize_plans
+        self.tables: Dict[str, Batch] = {}
+        self.models: Dict[str, ResolvedModel] = {}
+
+    # -- catalog-facing API ----------------------------------------------
+    def register_table(self, name: str, table: Batch) -> None:
+        self.tables[name] = table
+
+    def create_task(self, spec: TaskSpec) -> None:
+        self.registry.create_task(spec)
+
+    def resolve_task(self, name: str, X: np.ndarray, y: np.ndarray,
+                     force: bool = False) -> ResolvedModel:
+        """Select a model for the task from sample data, persist it via
+        the BLOB store + catalog, and load the weights back from storage
+        (the served model is the stored one, not the in-memory zoo
+        object)."""
+        if not force and name in self.models:
+            return self.models[name]
+        idx = self.registry.resolve(name, X, y, force=force)
+        zm = self.zoo[idx]
+        spec = self.registry.get(name)
+        params: Dict[str, np.ndarray] = {"W": zm.W}
+        if zm.centers is not None:
+            params["centers"] = zm.centers
+        arch = {"name": zm.name, "mode": zm.mode, "sigma": float(zm.sigma),
+                "source_family": zm.source_family}
+        self.blobs.save(zm.name, arch, params,
+                        task_types=[spec.kind], modality=spec.input_type)
+        arch2, flat = self.blobs.load(zm.name)
+        stored = ZooModel(name=arch2["name"],
+                          source_family=arch2["source_family"],
+                          W=np.asarray(flat["W"]), mode=arch2["mode"],
+                          centers=(np.asarray(flat["centers"])
+                                   if "centers" in flat else None),
+                          sigma=arch2["sigma"])
+        dim = stored.W.shape[0]
+        rm = ResolvedModel(
+            task=name, model_id=zm.name, version=f"{zm.name}@1.0",
+            features=stored.features,
+            head=lambda F: np.asarray(F, np.float32).mean(axis=1),
+            profile=profile_for_model(n_params=float(stored.W.size),
+                                      bytes_per_row=dim * 4))
+        self.models[name] = rm
+        return rm
+
+    # -- query execution -------------------------------------------------
+    def compile(self, plan: LogicalPlan,
+                nrows_hint: Optional[int] = None) -> LogicalPlan:
+        """Run the optimizer passes against this session's resolutions."""
+        if not self.optimize_plans:
+            return plan
+        profiles = {t: m.profile for t, m in self.models.items()}
+        hint = nrows_hint or batch_len(self.tables.get(plan.table, {})) or 1024
+        return optimize(plan, profiles, nrows_hint=hint,
+                        devices=self.devices)
+
+    def execute_plan(self, plan: LogicalPlan, sql_text: str = "",
+                     chunk_rows: Optional[int] = None,
+                     max_inflight: Optional[int] = None) -> QueryResult:
+        table = self.tables[plan.table]
+        for node in plan.nodes:
+            if node.op == "predict" and node.args["task"] not in self.models:
+                raise RuntimeError(
+                    f"task {node.args['task']!r} not resolved; call "
+                    "resolve_task(name, X_sample, y_sample) first")
+        plan = self.compile(plan, nrows_hint=batch_len(table))
+        ctx = CompileContext(
+            models=self.models, share=self.share,
+            share_version_of={t: m.version for t, m in self.models.items()})
+        dag, source_id, sink_id, agg_node = compile_plan(plan, ctx)
+        h0, m0 = self.share.stats.hits, self.share.stats.misses
+        ex = PipelineExecutor(dag, workers=self.workers)
+        if sink_id == source_id:                    # pure scan
+            rows = table
+        else:
+            rows = ex.execute_chunked(
+                source_id, table, chunk_rows=chunk_rows or self.chunk_rows,
+                sink_id=sink_id, max_inflight=max_inflight
+                or self.max_inflight)
+        # final aggregation over the concatenated stream (exact groups)
+        if agg_node is not None:
+            g = agg_node.args.get("group_by")
+            specs = agg_node.args["specs"]
+            rows = (groupby_aggs(rows, g, specs) if g
+                    else aggregate(rows, specs))
+        report = QueryReport(
+            sql=sql_text, plan=plan.describe(),
+            resolution={t: m.model_id for t, m in self.models.items()
+                        if any(n.op in ("predict", "embed")
+                               and n.args.get("task") == t
+                               for n in plan.nodes)},
+            wall_seconds=ex.stats.wall_seconds,
+            rows_in=batch_len(table), rows_out=batch_len(rows),
+            op_seconds=dict(ex.stats.op_seconds),
+            device_of=dict(ex.stats.device_of),
+            batch_size_of={n.args["task"]: int(n.args["batch_size"])
+                           for n in plan.nodes
+                           if n.op == "embed" and "batch_size" in n.args},
+            share_hits=self.share.stats.hits - h0,
+            share_misses=self.share.stats.misses - m0)
+        for st in ctx.batcher_stats.values():
+            report.batch_batches += st.batches
+            report.batch_rows += st.rows
+            report.batch_infer_seconds += st.infer_seconds
+        return QueryResult(rows=rows, report=report)
+
+    def sql(self, statement: str, sample: Optional[Tuple] = None):
+        """Execute one SQL statement. ``sample=(X, y)`` supplies the
+        resolution sample for any not-yet-resolved task references."""
+        stmt = parse(statement)
+        if isinstance(stmt, CreateTaskStmt):
+            self.create_task(stmt.spec)
+            return f"TASK {stmt.spec.name} CREATED"
+        assert isinstance(stmt, QueryStmt)
+        for t in stmt.tasks:
+            if t not in self.registry._tasks:
+                raise ValueError(f"unknown task {t}; CREATE TASK first")
+            if t not in self.models:
+                if sample is None:
+                    raise RuntimeError(
+                        f"task {t} unresolved and no sample given")
+                self.resolve_task(t, *sample)
+        return self.execute_plan(stmt.plan, sql_text=statement)

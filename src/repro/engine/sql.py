@@ -1,0 +1,295 @@
+"""MiniSQL: the task-centric SQL surface (paper §2.1, Table 1), promoted
+from the original `examples/` regex demo into a real tokenizer + recursive
+descent parser that lowers to the engine's logical plan IR.
+
+Supported statements::
+
+    CREATE TASK name (INPUT=Series, OUTPUT IN ('POS','NEG'),
+        TYPE='Classification');
+
+    SELECT gender, AVG(sentiment_classifier(emb)), COUNT(*)
+        FROM reviews WHERE len > 20 AND gender = 1 GROUP BY gender;
+
+    PREDICT emb USING TASK sentiment_classifier FROM reviews
+        WHERE len > 20;
+
+WHERE supports conjunctions of ``col <op> literal`` with op in
+``> >= < <= = !=``; aggregates are ``COUNT(*|col)``, ``SUM``, ``AVG``
+over plain columns or task calls ``task(col)``. Task calls resolve to a
+model through the session (selection subspace + catalog) — the user never
+names a model.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+from repro.core.task import TaskSpec
+from repro.engine.plan import LogicalPlan
+
+_TOKEN_RE = re.compile(
+    r"\s*(?:(?P<num>-?\d+\.\d+|-?\d+)|(?P<id>[A-Za-z_]\w*)"
+    r"|(?P<str>'[^']*'|\"[^\"]*\")|(?P<sym><=|>=|!=|<>|[(),*=<>;]))")
+
+_AGGS = {"COUNT": "count", "SUM": "sum", "AVG": "mean"}
+_CMP_OPS = {">", ">=", "<", "<=", "=", "!=", "<>"}
+
+
+def tokenize(sql: str) -> List[str]:
+    toks, pos = [], 0
+    while pos < len(sql):
+        m = _TOKEN_RE.match(sql, pos)
+        if not m:
+            if sql[pos:].strip():
+                raise ValueError(f"bad token at: {sql[pos:pos + 20]!r}")
+            break
+        pos = m.end()
+        tok = m.group().strip()
+        if tok:
+            toks.append(tok)
+    return toks
+
+
+@dataclass
+class TaskCall:
+    task: str
+    col: str
+
+
+@dataclass
+class SelectItem:
+    expr: Any                    # str column | TaskCall
+    agg: Optional[str] = None    # count | sum | mean
+    star: bool = False           # COUNT(*)
+
+
+@dataclass
+class CreateTaskStmt:
+    spec: TaskSpec
+
+
+@dataclass
+class QueryStmt:
+    plan: LogicalPlan
+    tasks: List[str] = field(default_factory=list)
+    output_cols: List[str] = field(default_factory=list)
+
+
+Statement = Any  # CreateTaskStmt | QueryStmt
+
+
+class _Parser:
+    def __init__(self, toks: List[str]):
+        self.toks = toks
+        self.i = 0
+
+    # -- plumbing --------------------------------------------------------
+    def peek(self) -> Optional[str]:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def next(self) -> str:
+        t = self.peek()
+        if t is None:
+            raise ValueError("unexpected end of statement")
+        self.i += 1
+        return t
+
+    def expect(self, *alts: str) -> str:
+        t = self.next()
+        if t.upper() not in alts and t not in alts:
+            raise ValueError(f"expected {'/'.join(alts)}, got {t!r}")
+        return t
+
+    def at_kw(self, kw: str) -> bool:
+        t = self.peek()
+        return t is not None and t.upper() == kw
+
+    # -- terminals -------------------------------------------------------
+    def literal(self) -> Any:
+        t = self.next()
+        if t[0] in "'\"":
+            return t[1:-1]
+        if re.fullmatch(r"-?\d+", t):
+            return int(t)
+        if re.fullmatch(r"-?\d+\.\d+", t):
+            return float(t)
+        return t  # bare identifier treated as string literal
+
+    # -- clauses ---------------------------------------------------------
+    def where_clause(self) -> List[Tuple[str, str, Any]]:
+        preds = []
+        while True:
+            col = self.next()
+            op = self.next()
+            if op not in _CMP_OPS:
+                raise ValueError(f"bad comparison operator {op!r}")
+            if op == "<>":
+                op = "!="
+            preds.append((col, op, self.literal()))
+            if self.at_kw("AND"):
+                self.next()
+                continue
+            break
+        return preds
+
+    def select_item(self) -> SelectItem:
+        t = self.next()
+        up = t.upper()
+        if up in _AGGS:
+            self.expect("(")
+            if self.peek() == "*":
+                self.next()
+                self.expect(")")
+                return SelectItem(None, agg=_AGGS[up], star=True)
+            inner = self.next()
+            if self.peek() == "(":          # task call inside aggregate
+                self.next()
+                col = self.next()
+                self.expect(")")
+                self.expect(")")
+                return SelectItem(TaskCall(inner, col), agg=_AGGS[up])
+            self.expect(")")
+            return SelectItem(inner, agg=_AGGS[up])
+        if self.peek() == "(":              # bare task call
+            self.next()
+            col = self.next()
+            self.expect(")")
+            return SelectItem(TaskCall(t, col))
+        return SelectItem(t)
+
+    # -- statements ------------------------------------------------------
+    def create_task(self) -> CreateTaskStmt:
+        self.expect("TASK")
+        name = self.next()
+        self.expect("(")
+        self.expect("INPUT")
+        self.expect("=")
+        input_type = self.next().lower()
+        self.expect(",")
+        self.expect("OUTPUT")
+        self.expect("IN")
+        self.expect("(")
+        labels = []
+        while self.peek() != ")":
+            labels.append(str(self.literal()))
+            if self.peek() == ",":
+                self.next()
+        self.expect(")")
+        self.expect(",")
+        self.expect("TYPE")
+        self.expect("=")
+        kind = str(self.literal()).lower()
+        self.expect(")")
+        return CreateTaskStmt(TaskSpec(name, input_type, tuple(labels),
+                                       kind))
+
+    def select(self) -> QueryStmt:
+        items = [self.select_item()]
+        while self.peek() == ",":
+            self.next()
+            items.append(self.select_item())
+        self.expect("FROM")
+        table = self.next()
+        preds = []
+        if self.at_kw("WHERE"):
+            self.next()
+            preds = self.where_clause()
+        group_by = None
+        if self.at_kw("GROUP"):
+            self.next()
+            self.expect("BY")
+            group_by = self.next()
+        return self._build_select(items, table, preds, group_by)
+
+    def _build_select(self, items, table, preds, group_by) -> QueryStmt:
+        plan = LogicalPlan.scan(table)
+        tasks: List[str] = []
+        score_of = {}               # (task, col) -> score column
+
+        def score_col(tc: TaskCall) -> str:
+            key = (tc.task, tc.col)
+            if key not in score_of:
+                name = "_score" if not score_of else f"_score{len(score_of) + 1}"
+                score_of[key] = name
+                plan.predict(tc.task, tc.col, out=name)
+                tasks.append(tc.task)
+            return score_of[key]
+
+        specs: List[Tuple[str, str, str]] = []
+        out_cols: List[str] = []
+        plain_cols: List[str] = []
+        has_agg = any(it.agg for it in items)
+        for it in items:
+            if it.agg:
+                if it.star:
+                    specs.append(("*", "count", "count"))
+                    out_cols.append("count")
+                    continue
+                col = (score_col(it.expr)
+                       if isinstance(it.expr, TaskCall) else it.expr)
+                name = f"{it.agg}_{col}"
+                specs.append((col, it.agg, name))
+                out_cols.append(name)
+            elif isinstance(it.expr, TaskCall):
+                if has_agg:
+                    raise ValueError("bare task calls cannot be mixed "
+                                     "with aggregates")
+                out_cols.append(score_col(it.expr))
+            else:
+                plain_cols.append(it.expr)
+                out_cols.append(it.expr)
+        # WHERE is evaluated after SELECT-item lowering here (inference
+        # first); the optimizer's pushdown pass restores filter-first
+        # order whenever predicates only touch base columns.
+        if preds:
+            plan.filter(preds)
+        if has_agg:
+            if plain_cols and group_by is None:
+                raise ValueError("bare columns with aggregates require "
+                                 "GROUP BY")
+            for c in plain_cols:
+                if c != group_by:
+                    raise ValueError(f"column {c!r} not in GROUP BY")
+            plan.agg(group_by, specs)
+        elif group_by is not None:
+            raise ValueError("GROUP BY without aggregates")
+        else:
+            plan.project(out_cols)      # SELECT list narrows the output
+        return QueryStmt(plan, tasks=tasks, output_cols=out_cols)
+
+    def predict_stmt(self) -> QueryStmt:
+        col = self.next()
+        self.expect("USING")
+        self.expect("TASK")
+        task = self.next()
+        self.expect("FROM")
+        table = self.next()
+        preds = []
+        if self.at_kw("WHERE"):
+            self.next()
+            preds = self.where_clause()
+        plan = LogicalPlan.scan(table)
+        plan.predict(task, col, out="_score")
+        if preds:
+            plan.filter(preds)
+        return QueryStmt(plan, tasks=[task], output_cols=["_score"])
+
+    def statement(self) -> Statement:
+        t = self.next().upper()
+        if t == "CREATE":
+            return self.create_task()
+        if t == "SELECT":
+            return self.select()
+        if t == "PREDICT":
+            return self.predict_stmt()
+        raise ValueError(f"unsupported statement {t}")
+
+
+def parse(sql: str) -> Statement:
+    toks = tokenize(sql.strip().rstrip(";"))
+    p = _Parser([t for t in toks if t != ";"])
+    stmt = p.statement()
+    if p.peek() is not None:
+        raise ValueError(f"trailing tokens: {p.toks[p.i:]}")
+    return stmt

@@ -1,11 +1,13 @@
 from repro.pipeline.batcher import (BatcherStats, ContinuousBatcher, Request,
                                     WindowBatcher, run_batched)
 from repro.pipeline.cost import (OpProfile, batch_cost, choose_batch_size,
-                                 choose_device, op_cost, profile_for_model)
+                                 choose_device, op_cost, place_dag,
+                                 profile_for_model)
 from repro.pipeline.dag import Dag, Edge, Node
-from repro.pipeline.operators import (Batch, batch_len, concat_batches,
-                                      filter_op, groupby_agg, iter_chunks,
-                                      join, scan, slice_batch, window_op)
+from repro.pipeline.operators import (Batch, aggregate, batch_len,
+                                      concat_batches, filter_op, groupby_agg,
+                                      groupby_aggs, iter_chunks, join, scan,
+                                      slice_batch, window_op)
 from repro.pipeline.scheduler import ExecStats, PipelineExecutor
 from repro.pipeline.share import (ShareStats, VectorShareCache, fingerprint,
                                   simd_normalize_embed)
@@ -13,9 +15,9 @@ from repro.pipeline.share import (ShareStats, VectorShareCache, fingerprint,
 __all__ = [
     "BatcherStats", "ContinuousBatcher", "Request", "WindowBatcher",
     "run_batched", "OpProfile", "batch_cost", "choose_batch_size",
-    "choose_device", "op_cost", "profile_for_model", "Dag", "Edge", "Node",
-    "Batch", "batch_len", "concat_batches", "filter_op", "groupby_agg",
-    "iter_chunks", "join", "scan", "slice_batch", "window_op", "ExecStats",
-    "PipelineExecutor", "ShareStats", "VectorShareCache", "fingerprint",
-    "simd_normalize_embed",
+    "choose_device", "op_cost", "place_dag", "profile_for_model", "Dag",
+    "Edge", "Node", "Batch", "aggregate", "batch_len", "concat_batches",
+    "filter_op", "groupby_agg", "groupby_aggs", "iter_chunks", "join",
+    "scan", "slice_batch", "window_op", "ExecStats", "PipelineExecutor",
+    "ShareStats", "VectorShareCache", "fingerprint", "simd_normalize_embed",
 ]

@@ -114,12 +114,13 @@ class ContinuousBatcher:
 
     def __init__(self, step_fn: Callable[[List[Any]], List[Any]],
                  profile: OpProfile, device: str = "tpu",
-                 max_wait_s: float = 0.01,
+                 max_wait_s: float = 0.01, idle_wait_s: float = 0.1,
                  mem_cap_bytes: float = 2e9):
         self.step_fn = step_fn
         self.batch_size = choose_batch_size(profile, device,
                                             mem_cap_bytes=mem_cap_bytes)
         self.max_wait_s = max_wait_s
+        self.idle_wait_s = idle_wait_s
         self._q: "queue.Queue[Request]" = queue.Queue()
         self._results: Dict[int, Any] = {}
         self._done = threading.Event()
@@ -129,21 +130,21 @@ class ContinuousBatcher:
         self._q.put(req)
 
     def _collect(self) -> List[Request]:
-        batch: List[Request] = []
-        deadline = None
+        # Block on the first request (bounded by idle_wait_s) so an empty
+        # queue parks the thread in the OS wait instead of busy-spinning.
+        try:
+            batch = [self._q.get(timeout=self.idle_wait_s)]
+        except queue.Empty:
+            return []
+        deadline = time.time() + self.max_wait_s
         while len(batch) < self.batch_size:
-            timeout = None
-            if deadline is not None:
-                timeout = max(0.0, deadline - time.time())
-                if timeout == 0:
-                    break
+            timeout = deadline - time.time()
+            if timeout <= 0:
+                break
             try:
-                r = self._q.get(timeout=timeout if timeout is not None else 0.002)
+                batch.append(self._q.get(timeout=timeout))
             except queue.Empty:
                 break
-            batch.append(r)
-            if deadline is None:
-                deadline = time.time() + self.max_wait_s
         return batch
 
     def run(self, total: int) -> Dict[int, Any]:

@@ -68,6 +68,26 @@ def choose_device(p: OpProfile, nrows: int,
     return min(cand, key=lambda d: op_cost(p, nrows, d))
 
 
+def place_dag(dag, profiles: Dict[str, OpProfile], nrows_hint: int = 1024,
+              devices=("host", "tpu")) -> Dict[str, str]:
+    """Plan-time device placement (Eq. 10) over an operator DAG.
+
+    Annotates each ``Node.device`` in place and returns the placement map.
+    This is a *planning* pass — `PipelineExecutor` is a pure runtime and
+    only reads the annotations (`repro.engine` calls this while lowering a
+    logical plan; callers building DAGs by hand call it directly).
+    """
+    placement = {}
+    for op_id, node in dag.nodes.items():
+        prof = profiles.get(op_id)
+        if node.kind in ("predict", "embed") and prof is not None:
+            placement[op_id] = choose_device(prof, nrows_hint, devices)
+        else:
+            placement[op_id] = "host"
+        node.device = placement[op_id]
+    return placement
+
+
 # ---------------------------------------------------------------------------
 # Batch-size selection (Eq. 11)
 # ---------------------------------------------------------------------------

@@ -85,6 +85,47 @@ def groupby_agg(b: Batch, key: str, col: str,
     return {key: keys, f"{agg}_{col}": vals}
 
 
+def groupby_aggs(b: Batch, key: str,
+                 specs: Sequence[tuple]) -> Batch:
+    """Multi-aggregate group-by: ``specs`` is a sequence of
+    ``(col, agg, out_name)`` with agg in mean|sum|count (count ignores
+    ``col``; pass '*'). One pass over the group index serves all specs."""
+    keys, inv = np.unique(b[key], return_inverse=True)
+    cnts = np.zeros(len(keys), np.int64)
+    np.add.at(cnts, inv, 1)
+    out: Batch = {key: keys}
+    for col, agg, name in specs:
+        if agg == "count":
+            out[name] = cnts.astype(np.float64)
+            continue
+        sums = np.zeros(len(keys), np.float64)
+        np.add.at(sums, inv, b[col].astype(np.float64))
+        if agg == "sum":
+            out[name] = sums
+        elif agg == "mean":
+            out[name] = sums / np.maximum(cnts, 1)
+        else:
+            raise ValueError(agg)
+    return out
+
+
+def aggregate(b: Batch, specs: Sequence[tuple]) -> Batch:
+    """Whole-table aggregates (no GROUP BY): one-row batch of
+    ``(col, agg, out_name)`` results."""
+    n = batch_len(b)
+    out: Batch = {}
+    for col, agg, name in specs:
+        if agg == "count":
+            out[name] = np.array([float(n)])
+        elif agg == "sum":
+            out[name] = np.array([float(b[col].sum()) if n else 0.0])
+        elif agg == "mean":
+            out[name] = np.array([float(b[col].mean()) if n else 0.0])
+        else:
+            raise ValueError(agg)
+    return out
+
+
 def window_op(b: Batch, col: str, size: int, fn: str = "mean") -> Batch:
     """Sliding window over a column (series tasks)."""
     x = b[col].astype(np.float64)

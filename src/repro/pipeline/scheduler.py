@@ -1,11 +1,14 @@
 """Pipelined DAG execution (paper §5.2 'Pipeline Processing').
 
-The executor walks the DAG in Algorithm-1 order; independent operators of
-a wave run concurrently on a thread pool (host relational work overlaps
-device inference), and ``predict`` nodes are dispatched to the device the
-cost model selected. Chunked mode streams table chunks through the whole
-DAG so stage i of chunk c overlaps stage i+1 of chunk c-1 — the paper's
-'minimize idle time between stages'.
+The executor is a *pure runtime*: it walks an already-annotated DAG in
+Algorithm-1 order; independent operators of a wave run concurrently on a
+thread pool (host relational work overlaps device inference), and each
+node runs on the device its ``Node.device`` annotation names. Placement
+itself is a planning decision — `repro.pipeline.cost.place_dag` (Eq. 10)
+or the `repro.engine` optimizer annotates the DAG before execution.
+Chunked mode streams table chunks through the whole DAG so stage i of
+chunk c overlaps stage i+1 of chunk c-1 — the paper's 'minimize idle
+time between stages' — with a configurable in-flight depth.
 """
 from __future__ import annotations
 
@@ -14,9 +17,9 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.pipeline.cost import OpProfile, choose_device, op_cost
 from repro.pipeline.dag import Dag, Node
-from repro.pipeline.operators import Batch, batch_len, concat_batches, iter_chunks
+from repro.pipeline.operators import (Batch, batch_len, concat_batches,
+                                      iter_chunks, slice_batch)
 
 
 @dataclass
@@ -28,28 +31,10 @@ class ExecStats:
 
 
 class PipelineExecutor:
-    def __init__(self, dag: Dag, *, workers: int = 4,
-                 profiles: Optional[Dict[str, OpProfile]] = None,
-                 devices=("host", "tpu")):
+    def __init__(self, dag: Dag, *, workers: int = 4):
         self.dag = dag
         self.workers = workers
-        self.profiles = profiles or {}
-        self.devices = devices
         self.stats = ExecStats()
-
-    # -- device placement (cost model, Eq. 10) -----------------------------
-    def place(self, nrows_hint: int = 1024) -> Dict[str, str]:
-        placement = {}
-        for op_id, node in self.dag.nodes.items():
-            prof = self.profiles.get(op_id)
-            if node.kind in ("predict", "embed") and prof is not None:
-                placement[op_id] = choose_device(prof, nrows_hint,
-                                                 self.devices)
-            else:
-                placement[op_id] = "host"
-            node.device = placement[op_id]
-        self.stats.device_of = placement
-        return placement
 
     # -- execution ---------------------------------------------------------
     def _run_node(self, node: Node, inputs: List[Any]) -> Any:
@@ -57,6 +42,7 @@ class PipelineExecutor:
         out = node.fn(*inputs) if node.fn else (inputs[0] if inputs else None)
         self.stats.op_seconds[node.op_id] = (
             self.stats.op_seconds.get(node.op_id, 0.0) + time.time() - t0)
+        self.stats.device_of[node.op_id] = node.device
         return out
 
     def execute(self, sources: Dict[str, Any]) -> Dict[str, Any]:
@@ -83,11 +69,15 @@ class PipelineExecutor:
     def execute_chunked(self, source_id: str, table: Batch,
                         chunk_rows: int = 256,
                         sink_id: Optional[str] = None,
-                        static: Optional[Dict[str, Any]] = None) -> Batch:
+                        static: Optional[Dict[str, Any]] = None,
+                        max_inflight: int = 3) -> Batch:
         """Stream chunks through the DAG with cross-chunk stage overlap:
         chunk c's wave w runs while chunk c+1's wave w-1 runs. ``static``
-        supplies non-streamed sources (e.g. dimension tables)."""
+        supplies non-streamed sources (e.g. dimension tables);
+        ``max_inflight`` bounds how many chunks may be in the pipeline at
+        once (memory vs overlap trade-off)."""
         static = static or {}
+        max_inflight = max(1, max_inflight)
         order = [v for v in self.dag.execution_order()
                  if v != source_id and v not in static]
         dep = self.dag.dependency_map()
@@ -116,9 +106,14 @@ class PipelineExecutor:
                     futs[op_id] = pool.submit(make_runner(op_id))
                 return futs
 
-            for chunk in iter_chunks(table, chunk_rows):
+            chunks = iter_chunks(table, chunk_rows)
+            if batch_len(table) == 0:
+                # stream one empty chunk so the output keeps the schema
+                # the pipeline produces (columns, dtypes) at zero rows
+                chunks = iter([slice_batch(table, 0, 0)])
+            for chunk in chunks:
                 inflight.append(launch(chunk))
-                if len(inflight) > 2:  # bounded pipeline depth
+                if len(inflight) > max_inflight - 1:  # bounded depth
                     done = inflight.pop(0)
                     outs.append(done[sink_id or order[-1]].result())
             for futs in inflight:

@@ -12,6 +12,7 @@ from __future__ import annotations
 import hashlib
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Dict, Optional, Tuple
@@ -22,10 +23,13 @@ from repro.storage import mvec
 
 
 def fingerprint(arr: np.ndarray) -> str:
+    # Full-content hash: query results are served from this cache, so a
+    # partial fingerprint would silently return stale embeddings after a
+    # mid-buffer mutation. sha1 is ~1 GB/s — noise next to embedding.
     h = hashlib.sha1()
     h.update(str(arr.shape).encode())
-    h.update(np.ascontiguousarray(arr).tobytes()[:1 << 16])
-    h.update(np.ascontiguousarray(arr).tobytes()[-(1 << 12):])
+    h.update(str(arr.dtype).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
     return h.hexdigest()[:16]
 
 
@@ -46,8 +50,8 @@ class VectorShareCache:
         if self.root:
             self.root.mkdir(parents=True, exist_ok=True)
         self.capacity = capacity_bytes
-        self._mem: Dict[str, np.ndarray] = {}
-        self._order: list = []
+        self._mem: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        self._used = 0
         self._lock = threading.Lock()
         self.stats = ShareStats()
 
@@ -61,6 +65,7 @@ class VectorShareCache:
         with self._lock:
             if key in self._mem:
                 self.stats.hits += 1
+                self._mem.move_to_end(key)
                 return self._mem[key]
         if self.root and (self.root / f"{key}.mvec").exists():
             vec = mvec.decode((self.root / f"{key}.mvec").read_bytes())
@@ -81,12 +86,14 @@ class VectorShareCache:
         return vec
 
     def _put(self, key: str, vec: np.ndarray) -> None:
+        if key in self._mem:
+            self._used -= self._mem[key].nbytes
         self._mem[key] = vec
-        self._order.append(key)
-        used = sum(v.nbytes for v in self._mem.values())
-        while used > self.capacity and len(self._order) > 1:
-            old = self._order.pop(0)
-            used -= self._mem.pop(old, np.empty(0)).nbytes
+        self._mem.move_to_end(key)
+        self._used += vec.nbytes
+        while self._used > self.capacity and len(self._mem) > 1:
+            _, old = self._mem.popitem(last=False)
+            self._used -= old.nbytes
 
     @property
     def hit_rate(self) -> float:

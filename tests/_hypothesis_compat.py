@@ -1,0 +1,88 @@
+"""Fallback shim so the suite collects without the optional ``hypothesis``
+dependency.
+
+When the real package is installed this module is a no-op. Otherwise it
+installs a tiny deterministic stand-in into ``sys.modules`` that supports
+the subset the tests use: ``@given`` over ``integers`` / ``lists`` /
+``sampled_from`` / ``floats`` / ``booleans`` strategies and a pass-through
+``@settings``. Each ``@given`` test runs a fixed number of seeded examples
+(default 10, capped by ``settings(max_examples=...)``) — less thorough
+than real property testing, but the invariants still get exercised.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+def _install_shim() -> None:
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    def integers(min_value=0, max_value=100):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 10))
+                for i in range(min(n, 10)):
+                    rng = random.Random(0xC0FFEE + i * 7919)
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples=10, **_kw):
+        def deco(fn):
+            target = fn
+            # applied above @given: stash the budget on the inner fn too
+            target._shim_max_examples = max_examples
+            return target
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.lists = lists
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover
+    _install_shim()

@@ -1,6 +1,7 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see 1 device; multi-device tests spawn subprocesses with their own flags.
 """
+import _hypothesis_compat  # noqa: F401  (shim before test modules import it)
 import jax
 import numpy as np
 import pytest

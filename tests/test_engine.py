@@ -1,0 +1,341 @@
+"""Task-centric query engine: parser, optimizer passes, session
+end-to-end parity with a hand-built DAG, chunked in-flight depth, and the
+LRU/batcher fixes underneath it."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import make_task, pretrain_model
+from repro.core.task import TaskSpec
+from repro.engine import (LogicalPlan, MorphingSession, QueryStmt, parse,
+                          insert_embeds, push_down_filters)
+from repro.pipeline import (ContinuousBatcher, Dag, Node, OpProfile,
+                            PipelineExecutor, Request, VectorShareCache,
+                            filter_op, groupby_agg, place_dag)
+
+
+# -- fixtures --------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mini_zoo():
+    rng = np.random.default_rng(3)
+    src = make_task(rng, "gauss", n=120, dim=8, classes=3)
+    return [pretrain_model(src, width=12, seed=1, name="m0"),
+            pretrain_model(src, width=8, seed=2, name="m1")]
+
+
+@pytest.fixture()
+def session(tmp_path, mini_zoo):
+    """Session with a forced resolution (no selector needed: the registry
+    returns cached resolutions)."""
+    sess = MorphingSession(zoo=mini_zoo, root=tmp_path, chunk_rows=64)
+    sess.create_task(TaskSpec("sent", "series", ("P", "N")))
+    sess.registry._resolution["sent"] = 0
+    rng = np.random.default_rng(0)
+    n = 400
+    sess.register_table("reviews", {
+        "gender": rng.integers(0, 2, n),
+        "len": rng.integers(1, 200, n),
+        "emb": rng.standard_normal((n, 8)).astype(np.float32)})
+    sess.resolve_task("sent", np.zeros((4, 8), np.float32),
+                      np.zeros(4, np.int64))
+    return sess
+
+
+# -- parser ----------------------------------------------------------------
+
+def test_parse_multi_predicate_and_aggs():
+    s = parse("SELECT gender, AVG(sent(emb)), COUNT(*), SUM(len) "
+              "FROM reviews WHERE len > 20 AND gender != 1 "
+              "GROUP BY gender")
+    assert isinstance(s, QueryStmt)
+    assert s.tasks == ["sent"]
+    ops = s.plan.ops()
+    assert ops == ["scan", "predict", "filter", "agg"]
+    agg = s.plan.nodes[-1]
+    assert agg.args["group_by"] == "gender"
+    assert ("*", "count", "count") in agg.args["specs"]
+    assert ("len", "sum", "sum_len") in agg.args["specs"]
+    filt = s.plan.nodes[2]
+    assert filt.args["preds"] == [("len", ">", 20), ("gender", "!=", 1)]
+
+
+def test_parse_predict_using_task():
+    s = parse("PREDICT emb USING TASK sent FROM reviews WHERE len > 150")
+    assert s.tasks == ["sent"]
+    assert s.plan.ops() == ["scan", "predict", "filter"]
+
+
+def test_parse_errors():
+    with pytest.raises(ValueError):
+        parse("SELECT gender, AVG(x) FROM t")       # bare col, no GROUP BY
+    with pytest.raises(ValueError):
+        parse("DELETE FROM t")
+    with pytest.raises(ValueError):
+        parse("SELECT a FROM t GROUP BY a")         # GROUP BY without agg
+
+
+# -- optimizer passes ------------------------------------------------------
+
+def test_pushdown_moves_base_column_filter_below_predict():
+    plan = (LogicalPlan.scan("t").predict("task", "emb")
+            .filter([("len", ">", 5)]).agg("g", [("_score", "mean", "m")]))
+    push_down_filters(plan)
+    assert plan.ops() == ["scan", "filter", "predict", "agg"]
+
+
+def test_pushdown_keeps_filter_on_inference_output():
+    plan = (LogicalPlan.scan("t").predict("task", "emb")
+            .filter([("_score", ">", 0)]))
+    push_down_filters(plan)
+    assert plan.ops() == ["scan", "predict", "filter"]
+
+
+def test_embed_insertion_splits_predict():
+    plan = LogicalPlan.scan("t").predict("task", "emb")
+    insert_embeds(plan)
+    assert plan.ops() == ["scan", "embed", "predict"]
+    assert plan.nodes[2].args["head_only"]
+    assert plan.nodes[1].args["out"] == plan.nodes[2].args["col"]
+
+
+def test_optimizer_annotates_device_and_batch(session):
+    res = session.sql("SELECT gender, AVG(sent(emb)) FROM reviews "
+                      "WHERE len > 20 GROUP BY gender")
+    rep = res.report
+    assert "embed" in rep.device_of and rep.device_of["embed"] in (
+        "host", "tpu", "api")
+    assert rep.batch_size_of["sent"] >= 1
+    # pushdown happened: filter ran before embed in the compiled plan
+    assert rep.plan.index("filter") < rep.plan.index("embed")
+
+
+# -- session end-to-end ----------------------------------------------------
+
+def test_sql_matches_hand_built_dag(session, mini_zoo):
+    res = session.sql("SELECT gender, AVG(sent(emb)) FROM reviews "
+                      "WHERE len > 20 GROUP BY gender")
+    model = session.models["sent"]
+    table = session.tables["reviews"]
+
+    def predict_node(b):
+        out = dict(b)
+        out["_score"] = model.features(b["emb"]).mean(axis=1)
+        return out
+
+    dag = Dag()
+    dag.add(Node("reviews", "scan"))
+    dag.add(Node("where", "filter",
+                 fn=lambda b: filter_op(b, lambda x: x["len"] > 20)),
+            deps=("reviews",))
+    dag.add(Node("pred", "predict", fn=predict_node, cost_hint=5),
+            deps=("where",))
+    dag.add(Node("agg", "groupby",
+                 fn=lambda b: groupby_agg(b, "gender", "_score")),
+            deps=("pred",))
+    ref = PipelineExecutor(dag).execute({"reviews": table})["agg"]
+    np.testing.assert_array_equal(res.rows["gender"], ref["gender"])
+    np.testing.assert_allclose(res.rows["mean__score"], ref["mean__score"],
+                               rtol=1e-5)
+
+
+def test_repeated_query_hits_share_cache(session):
+    r1 = session.sql("SELECT gender, AVG(sent(emb)) FROM reviews "
+                     "GROUP BY gender")
+    assert r1.report.share_hits == 0 and r1.report.share_misses > 0
+    r2 = session.sql("SELECT gender, AVG(sent(emb)) FROM reviews "
+                     "GROUP BY gender")
+    assert r2.report.share_hit_rate == 1.0
+    np.testing.assert_allclose(r1.rows["mean__score"],
+                               r2.rows["mean__score"], rtol=1e-6)
+
+
+def test_plain_aggregates_no_group_by(session):
+    res = session.sql("SELECT COUNT(*), SUM(len), AVG(len) FROM reviews "
+                      "WHERE len > 100")
+    t = session.tables["reviews"]
+    mask = t["len"] > 100
+    assert res.rows["count"][0] == mask.sum()
+    np.testing.assert_allclose(res.rows["sum_len"][0], t["len"][mask].sum())
+    np.testing.assert_allclose(res.rows["mean_len"][0],
+                               t["len"][mask].mean())
+
+
+def test_empty_chunk_keeps_embed_width(tmp_path, mini_zoo):
+    """A fully-filtered chunk must emit (0, width) embeddings so
+    cross-chunk concatenation doesn't shape-mismatch."""
+    sess = MorphingSession(zoo=mini_zoo, root=tmp_path, chunk_rows=64)
+    sess.create_task(TaskSpec("sent", "series", ("P", "N")))
+    sess.registry._resolution["sent"] = 0
+    rng = np.random.default_rng(1)
+    n = 200
+    ln = np.concatenate([np.zeros(64, np.int64),      # chunk 0 all filtered
+                         rng.integers(100, 200, n - 64)])
+    sess.register_table("reviews", {
+        "gender": rng.integers(0, 2, n), "len": ln,
+        "emb": rng.standard_normal((n, 8)).astype(np.float32)})
+    sess.resolve_task("sent", np.zeros((4, 8), np.float32),
+                      np.zeros(4, np.int64))
+    res = sess.sql("SELECT gender, AVG(sent(emb)) FROM reviews "
+                   "WHERE len > 50 GROUP BY gender")
+    assert res.report.rows_out == 2
+
+
+def test_select_list_projects_columns(session):
+    res = session.sql("SELECT gender FROM reviews WHERE len > 20")
+    assert list(res.rows) == ["gender"]
+    res2 = session.sql("SELECT sent(emb) FROM reviews WHERE len > 190")
+    assert list(res2.rows) == ["_score"]
+
+
+def test_fingerprint_sees_mid_buffer_mutations(session):
+    t = session.tables["reviews"]
+    before = session.sql("SELECT gender, AVG(sent(emb)) FROM reviews "
+                         "GROUP BY gender").rows["mean__score"]
+    t["emb"][150:160] += 5.0
+    after = session.sql("SELECT gender, AVG(sent(emb)) FROM reviews "
+                        "GROUP BY gender").rows["mean__score"]
+    assert not np.allclose(before, after)
+
+
+def test_bare_task_call_with_aggregates_rejected():
+    with pytest.raises(ValueError):
+        parse("SELECT sent(emb), AVG(len) FROM reviews")
+
+
+def test_zero_row_table_keeps_schema(tmp_path, mini_zoo):
+    sess = MorphingSession(zoo=mini_zoo, root=tmp_path)
+    sess.create_task(TaskSpec("sent", "series", ("P", "N")))
+    sess.registry._resolution["sent"] = 0
+    sess.register_table("empty", {
+        "gender": np.zeros(0, np.int64), "len": np.zeros(0, np.int64),
+        "emb": np.zeros((0, 8), np.float32)})
+    sess.resolve_task("sent", np.zeros((4, 8), np.float32),
+                      np.zeros(4, np.int64))
+    res = sess.sql("SELECT gender, AVG(sent(emb)) FROM empty "
+                   "WHERE len > 5 GROUP BY gender")
+    assert list(res.rows) == ["gender", "mean__score"]
+    assert res.report.rows_out == 0
+    res2 = sess.sql("SELECT gender FROM empty")
+    assert list(res2.rows) == ["gender"] and len(res2.rows["gender"]) == 0
+
+
+def test_predict_statement_rows(session):
+    res = session.sql("PREDICT emb USING TASK sent FROM reviews "
+                      "WHERE len > 150")
+    t = session.tables["reviews"]
+    assert res.report.rows_out == int((t["len"] > 150).sum())
+    assert "_score" in res.rows
+
+
+def test_model_served_from_blob_store(session, tmp_path):
+    """Resolution persists weights via the BLOB store + catalog; the
+    served model is reconstructed from storage."""
+    info = session.catalog.get_model("m0")
+    assert info.storage == "blob"
+    assert (session.root / "models" / "m0.blob").exists()
+
+
+def test_unresolved_task_raises(tmp_path, mini_zoo):
+    sess = MorphingSession(zoo=mini_zoo, root=tmp_path)
+    sess.create_task(TaskSpec("t2", "series", ("A",)))
+    sess.register_table("x", {"emb": np.zeros((4, 8), np.float32)})
+    with pytest.raises(RuntimeError):
+        sess.sql("SELECT AVG(t2(emb)) FROM x")
+
+
+# -- chunked execution depth ----------------------------------------------
+
+def _depth_dag(active, max_seen, lock):
+    def slow(b):
+        with lock:
+            active[0] += 1
+            max_seen[0] = max(max_seen[0], active[0])
+        time.sleep(0.002)
+        with lock:
+            active[0] -= 1
+        return b
+    d = Dag()
+    d.add(Node("src", "scan"))
+    d.add(Node("p", "predict", fn=slow, cost_hint=5), deps=("src",))
+    return d
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_execute_chunked_inflight_depth(depth):
+    table = {"x": np.arange(512.0)}
+    active, max_seen, lock = [0], [0], threading.Lock()
+    ex = PipelineExecutor(_depth_dag(active, max_seen, lock))
+    out = ex.execute_chunked("src", table, chunk_rows=32, sink_id="p",
+                             max_inflight=depth)
+    np.testing.assert_array_equal(np.sort(out["x"]), table["x"])
+    assert max_seen[0] <= depth
+
+
+# -- satellite fixes under the engine -------------------------------------
+
+def test_share_cache_lru_recency_and_accounting():
+    embeds = {"n": 0}
+
+    def embed(X):
+        embeds["n"] += 1
+        return X.astype(np.float32)
+
+    a = np.ones((1, 256), np.float32)
+    b = np.full((1, 256), 2.0, np.float32)
+    c = np.full((1, 256), 3.0, np.float32)
+    cache = VectorShareCache(capacity_bytes=2 * a.nbytes)
+    cache.get_or_embed("t", "c", a, embed)
+    cache.get_or_embed("t", "c", b, embed)
+    cache.get_or_embed("t", "c", a, embed)        # hit refreshes recency
+    cache.get_or_embed("t", "c", c, embed)        # evicts b, not a
+    assert embeds["n"] == 3
+    cache.get_or_embed("t", "c", a, embed)        # still cached
+    assert embeds["n"] == 3
+    cache.get_or_embed("t", "c", b, embed)        # b was evicted
+    assert embeds["n"] == 4
+    assert cache._used == sum(v.nbytes for v in cache._mem.values())
+
+
+def test_share_cache_disk_hit_no_duplicate_accounting(tmp_path):
+    X = np.ones((4, 16), np.float32)
+    c1 = VectorShareCache(tmp_path)
+    c1.get_or_embed("t", "c", X, lambda x: x)
+    c2 = VectorShareCache(tmp_path)
+    c2.get_or_embed("t", "c", X, lambda x: x)     # disk tier
+    c2.get_or_embed("t", "c", X, lambda x: x)     # memory tier
+    assert len(c2._mem) == 1
+    assert c2._used == next(iter(c2._mem.values())).nbytes
+    assert c2.stats.hits == 2 and c2.stats.misses == 0
+
+
+def test_continuous_batcher_blocks_instead_of_spinning():
+    prof = OpProfile(flops_per_row=1e3, bytes_per_row=64, model_bytes=1e4)
+    cb = ContinuousBatcher(lambda xs: [x * 2 for x in xs], prof,
+                           device="host", max_wait_s=0.005,
+                           idle_wait_s=0.05)
+    t = threading.Thread(target=lambda: [
+        time.sleep(0.02),
+        [cb.submit(Request(i, i)) for i in range(8)]])
+    t0 = time.time()
+    t.start()
+    res = cb.run(total=8)
+    t.join()
+    assert res == {i: i * 2 for i in range(8)}
+    # empty-queue polls block (idle_wait_s), so the run loop iterates few
+    # times rather than busy-spinning thousands of 2ms polls
+    assert time.time() - t0 < 2.0
+    assert cb._collect() == []                     # times out, no spin
+
+
+def test_place_dag_annotates_nodes():
+    d = Dag()
+    d.add(Node("src", "scan"))
+    d.add(Node("p", "predict", fn=lambda b: b, cost_hint=5), deps=("src",))
+    placement = place_dag(d, {"p": OpProfile(
+        flops_per_row=2e9, bytes_per_row=4096, model_bytes=4e9)},
+        nrows_hint=4096)
+    assert placement["p"] == "tpu" and d.nodes["p"].device == "tpu"
+    assert placement["src"] == "host"
