@@ -1,10 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (values that are ratios or
-counts are emitted as plain values; see each module).
+counts are emitted as plain values; see each module). Modules may also
+write machine-readable JSON artifacts next to the working directory —
+``bench_engine`` writes ``BENCH_engine.json`` (rows/s per execution
+backend, jax-vs-numpy speedup, share hit rate, compile/stage counts) so
+the perf trajectory is tracked per PR.
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -36,6 +41,9 @@ def main() -> int:
         except Exception:
             failed.append(mod_name)
             traceback.print_exc()
+    for artifact in ("BENCH_engine.json",):
+        if os.path.exists(artifact):
+            print(f"# artifact: {artifact}")
     if failed:
         print(f"# FAILED: {failed}")
         return 1

@@ -23,6 +23,18 @@ import numpy as np
 FAMILIES = ("gauss", "ring", "sparse", "stripe")
 
 
+def adapt_input_width(X: np.ndarray, d: int) -> np.ndarray:
+    """Slice wide inputs / zero-pad narrow ones to feature width ``d``.
+
+    The single source of truth for input-width adaptation: every
+    execution path (numpy ``ZooModel.features`` and the staged device
+    backends) must use this so backends stay numerically interchangeable.
+    """
+    if X.shape[1] >= d:
+        return X[:, :d]
+    return np.pad(X, ((0, 0), (0, d - X.shape[1])))
+
+
 @dataclass
 class Task:
     name: str
@@ -89,9 +101,7 @@ class ZooModel:
     meta: Dict = field(default_factory=dict)
 
     def features(self, X: np.ndarray) -> np.ndarray:
-        d = self.W.shape[0]
-        Xp = X[:, :d] if X.shape[1] >= d else np.pad(
-            X, ((0, 0), (0, d - X.shape[1])))
+        Xp = adapt_input_width(X, self.W.shape[0])
         if self.mode == "radial":
             d2 = ((Xp[:, None, :] - self.centers[None]) ** 2).sum(-1)
             return np.exp(-d2 / (2 * self.sigma ** 2))

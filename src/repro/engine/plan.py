@@ -33,8 +33,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.pipeline.batcher import BatcherStats, WindowBatcher
-from repro.pipeline.cost import (OpProfile, choose_batch_size, choose_device)
+from repro.pipeline.backend import InferSpec, default_host_backend
+from repro.pipeline.batcher import BatcherStats
+from repro.pipeline.cost import (HardwareProfile, OpProfile,
+                                 choose_batch_size, choose_device)
 from repro.pipeline.dag import Dag, Node
 from repro.pipeline.operators import Batch, filter_op
 
@@ -179,10 +181,14 @@ def insert_embeds(plan: LogicalPlan) -> LogicalPlan:
 
 def annotate_plan(plan: LogicalPlan, profiles: Dict[str, OpProfile],
                   nrows_hint: int = 1024, devices=("host", "tpu"),
-                  mem_cap_bytes: float = 2e9) -> LogicalPlan:
+                  mem_cap_bytes: float = 2e9,
+                  hw: Optional[Dict[str, HardwareProfile]] = None
+                  ) -> LogicalPlan:
     """Plan-time device placement (Eq. 10) and batch-size selection
     (Eq. 11). ``profiles`` maps task name -> OpProfile of the resolved
-    model. Head-only predicts are O(rows) host work."""
+    model; ``hw`` supplies calibrated hardware profiles (measured from
+    the live backends) that override the spec-sheet defaults. Head-only
+    predicts are O(rows) host work."""
     for node in plan.nodes:
         if node.op == "embed" or (node.op == "predict"
                                   and not node.args.get("head_only")):
@@ -191,22 +197,23 @@ def annotate_plan(plan: LogicalPlan, profiles: Dict[str, OpProfile],
                 node.args.setdefault("device", "host")
                 node.args.setdefault("batch_size", 32)
                 continue
-            dev = choose_device(prof, nrows_hint, devices)
+            dev = choose_device(prof, nrows_hint, devices, hw)
             node.args["device"] = dev
             node.args["batch_size"] = choose_batch_size(
-                prof, dev, mem_cap_bytes=mem_cap_bytes)
+                prof, dev, mem_cap_bytes=mem_cap_bytes, hw=hw)
         elif node.op == "predict":
             node.args["device"] = "host"
     return plan
 
 
 def optimize(plan: LogicalPlan, profiles: Dict[str, OpProfile],
-             nrows_hint: int = 1024, devices=("host", "tpu")) -> LogicalPlan:
+             nrows_hint: int = 1024, devices=("host", "tpu"),
+             hw: Optional[Dict[str, HardwareProfile]] = None) -> LogicalPlan:
     plan = push_down_filters(plan)
     plan = insert_embeds(plan)
     # pushdown again: embed insertion may leave a filter above an embed
     plan = push_down_filters(plan)
-    return annotate_plan(plan, profiles, nrows_hint, devices)
+    return annotate_plan(plan, profiles, nrows_hint, devices, hw=hw)
 
 
 # ---------------------------------------------------------------------------
@@ -232,27 +239,17 @@ def _make_pred(preds: Sequence[Tuple[str, str, Any]]):
     return pred
 
 
-def _batched_features(model, batch_size: int,
-                      stats: BatcherStats) -> Callable:
-    """Wrap a model's feature fn in a WindowBatcher: rows are aggregated
-    into windows and run as one device call each (paper §5.2 batch
-    inference), accumulating stats across chunks."""
-    def run(X: np.ndarray) -> np.ndarray:
-        if len(X) == 0:
-            # empty chunk: keep the true feature width so cross-chunk
-            # concatenation stays shape-consistent
-            return np.asarray(model.features(X))
-        wb = WindowBatcher(model.features, batch_size=batch_size,
-                           convert_workers=1)
-        for i in range(len(X)):
-            wb.add(i, X[i])
-        res = wb.finish()
-        stats.batches += wb.stats.batches
-        stats.rows += wb.stats.rows
-        stats.infer_seconds += wb.stats.infer_seconds
-        stats.convert_seconds += wb.stats.convert_seconds
-        return np.stack([np.asarray(res[i]) for i in range(len(X))])
-    return run
+def _infer_node(op_id: str, kind: str, spec: InferSpec,
+                device: str, cost_hint: float) -> Node:
+    """Build an inference Node: the InferSpec in ``meta`` is what a
+    registered backend executes natively; ``fn`` is the host fallback
+    (same spec through the singleton numpy backend) for executors built
+    without a registry."""
+    node = Node(op_id, kind,
+                fn=lambda b, _s=spec: default_host_backend().run_infer(_s, b),
+                cost_hint=cost_hint, device=device)
+    node.meta["infer"] = spec
+    return node
 
 
 def compile_plan(plan: LogicalPlan, ctx: CompileContext,
@@ -293,25 +290,16 @@ def compile_plan(plan: LogicalPlan, ctx: CompileContext,
         elif node.op == "embed":
             op_id = fresh("embed")
             task = node.args["task"]
-            model = ctx.models[task]
-            bs = int(node.args.get("batch_size", 32))
-            stats = ctx.batcher_stats.setdefault(task, BatcherStats())
-            feat = _batched_features(model, bs, stats)
-            col, out = node.args["col"], node.args["out"]
-            version = ctx.share_version_of.get(task, "v1")
-
-            def embed_fn(b, _c=col, _o=out, _f=feat, _v=version, _t=table):
-                res = dict(b)
-                if ctx.share is not None and len(b[_c]):
-                    res[_o] = ctx.share.get_or_embed(_t, _c, b[_c], _f,
-                                                     version=_v)
-                else:
-                    res[_o] = _f(b[_c])
-                return res
-
-            dag.add(Node(op_id, "embed", fn=embed_fn,
-                         cost_hint=8.0,
-                         device=node.args.get("device", "host")),
+            spec = InferSpec(
+                kind="embed", task=task, col=node.args["col"],
+                out=node.args["out"], table=table,
+                version=ctx.share_version_of.get(task, "v1"),
+                model=ctx.models[task],
+                batch_size=int(node.args.get("batch_size", 32)),
+                share=ctx.share,
+                stats=ctx.batcher_stats.setdefault(task, BatcherStats()))
+            dag.add(_infer_node(op_id, "embed", spec, cost_hint=8.0,
+                                device=node.args.get("device", "host")),
                     deps=(prev,))
         elif node.op == "predict":
             op_id = fresh("predict")
@@ -319,24 +307,27 @@ def compile_plan(plan: LogicalPlan, ctx: CompileContext,
             model = ctx.models[task]
             col, out = node.args["col"], node.args["out"]
             if node.args.get("head_only"):
+                # cheap O(rows) score head: stays a host closure
                 def pred_fn(b, _c=col, _o=out, _m=model):
                     res = dict(b)
                     res[_o] = _m.head(b[_c])
                     return res
-                cost = 1.0
+                dag.add(Node(op_id, "predict", fn=pred_fn, cost_hint=1.0,
+                             device=node.args.get("device", "host")),
+                        deps=(prev,))
             else:
-                bs = int(node.args.get("batch_size", 32))
-                stats = ctx.batcher_stats.setdefault(task, BatcherStats())
-                feat = _batched_features(model, bs, stats)
-
-                def pred_fn(b, _c=col, _o=out, _m=model, _f=feat):
-                    res = dict(b)
-                    res[_o] = _m.head(_f(b[_c]))
-                    return res
-                cost = 8.0
-            dag.add(Node(op_id, "predict", fn=pred_fn, cost_hint=cost,
-                         device=node.args.get("device", "host")),
-                    deps=(prev,))
+                spec = InferSpec(
+                    kind="predict", task=task, col=col, out=out,
+                    table=table,
+                    version=ctx.share_version_of.get(task, "v1"),
+                    model=model,
+                    batch_size=int(node.args.get("batch_size", 32)),
+                    share=None,
+                    stats=ctx.batcher_stats.setdefault(task,
+                                                       BatcherStats()))
+                dag.add(_infer_node(op_id, "predict", spec, cost_hint=8.0,
+                                    device=node.args.get("device", "host")),
+                        deps=(prev,))
         else:
             raise ValueError(f"cannot lower plan op {node.op}")
         prev = op_id

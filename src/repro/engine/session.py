@@ -32,8 +32,10 @@ from repro.core.zoo import ZooModel
 from repro.engine.plan import (CompileContext, LogicalPlan, compile_plan,
                                optimize)
 from repro.engine.sql import CreateTaskStmt, QueryStmt, parse
+from repro.pipeline.backend import ExecutionBackend, make_backends
 from repro.pipeline.batcher import BatcherStats
-from repro.pipeline.cost import OpProfile, profile_for_model
+from repro.pipeline.cost import (HardwareProfile, OpProfile, calibrate,
+                                 profile_for_model)
 from repro.pipeline.operators import (Batch, aggregate, batch_len,
                                       groupby_aggs)
 from repro.pipeline.scheduler import PipelineExecutor
@@ -51,6 +53,9 @@ class ResolvedModel:
     features: Callable[[np.ndarray], np.ndarray]   # expensive extractor
     head: Callable[[np.ndarray], np.ndarray]       # cheap score head
     profile: OpProfile
+    zoo_model: Optional[ZooModel] = None           # raw weights (staging)
+    head_kind: str = "mean"          # 'mean' lets device backends fuse the
+    #                                # head; anything else runs head on host
 
 
 @dataclass
@@ -64,7 +69,9 @@ class QueryReport:
     rows_out: int = 0
     op_seconds: Dict[str, float] = field(default_factory=dict)
     device_of: Dict[str, str] = field(default_factory=dict)
+    backend_of: Dict[str, str] = field(default_factory=dict)
     batch_size_of: Dict[str, int] = field(default_factory=dict)
+    compile_count: int = 0          # jit compiles triggered by this query
     share_hits: int = 0
     share_misses: int = 0
     batch_batches: int = 0
@@ -89,6 +96,7 @@ class MorphingSession:
     def __init__(self, selector=None, zoo: Optional[List[ZooModel]] = None,
                  root: Optional[Path] = None, *,
                  devices: Tuple[str, ...] = ("host", "tpu"),
+                 backend: str = "auto", enable_share: bool = True,
                  chunk_rows: int = 256, max_inflight: int = 3,
                  workers: int = 4, optimize_plans: bool = True,
                  share_capacity_bytes: int = 1 << 30):
@@ -101,6 +109,10 @@ class MorphingSession:
         self.registry = TaskRegistry(selector=selector, zoo=zoo)
         self.zoo = zoo or []
         self.devices = devices
+        self.backends: Dict[str, ExecutionBackend] = make_backends(
+            backend, devices=devices)
+        self.enable_share = enable_share
+        self.hw: Optional[Dict[str, HardwareProfile]] = None
         self.chunk_rows = chunk_rows
         self.max_inflight = max_inflight
         self.workers = workers
@@ -146,9 +158,30 @@ class MorphingSession:
             features=stored.features,
             head=lambda F: np.asarray(F, np.float32).mean(axis=1),
             profile=profile_for_model(n_params=float(stored.W.size),
-                                      bytes_per_row=dim * 4))
+                                      bytes_per_row=dim * 4),
+            zoo_model=stored)
+        # one-time weight staging: each distinct backend moves the stored
+        # weights to its device now, not per chunk (TransCost, Eq. 7)
+        for b in {id(b): b for b in self.backends.values()}.values():
+            b.stage(rm.version, stored)
         self.models[name] = rm
         return rm
+
+    def calibrate(self, rows=(256, 2048),
+                  repeats: int = 3) -> Dict[str, HardwareProfile]:
+        """Measure per-row throughput + launch latency from each live
+        backend (cost.calibrate) and use the measured profiles for all
+        subsequent Eq. 10/11 planning decisions. A backend shared by
+        several device names is measured once and the profile reused."""
+        import dataclasses
+        measured: Dict[int, HardwareProfile] = {}
+        self.hw = {}
+        for dev, b in self.backends.items():
+            if id(b) not in measured:
+                measured[id(b)] = calibrate(b, dev, rows=rows,
+                                            repeats=repeats)
+            self.hw[dev] = dataclasses.replace(measured[id(b)], name=dev)
+        return self.hw
 
     # -- query execution -------------------------------------------------
     def compile(self, plan: LogicalPlan,
@@ -159,7 +192,7 @@ class MorphingSession:
         profiles = {t: m.profile for t, m in self.models.items()}
         hint = nrows_hint or batch_len(self.tables.get(plan.table, {})) or 1024
         return optimize(plan, profiles, nrows_hint=hint,
-                        devices=self.devices)
+                        devices=self.devices, hw=self.hw)
 
     def execute_plan(self, plan: LogicalPlan, sql_text: str = "",
                      chunk_rows: Optional[int] = None,
@@ -172,11 +205,16 @@ class MorphingSession:
                     "resolve_task(name, X_sample, y_sample) first")
         plan = self.compile(plan, nrows_hint=batch_len(table))
         ctx = CompileContext(
-            models=self.models, share=self.share,
+            models=self.models,
+            share=self.share if self.enable_share else None,
             share_version_of={t: m.version for t, m in self.models.items()})
         dag, source_id, sink_id, agg_node = compile_plan(plan, ctx)
         h0, m0 = self.share.stats.hits, self.share.stats.misses
-        ex = PipelineExecutor(dag, workers=self.workers)
+        distinct_backends = {id(b): b for b in self.backends.values()}
+        c0 = sum(getattr(b, "compile_count", 0)
+                 for b in distinct_backends.values())
+        ex = PipelineExecutor(dag, workers=self.workers,
+                              backends=self.backends)
         if sink_id == source_id:                    # pure scan
             rows = table
         else:
@@ -200,6 +238,9 @@ class MorphingSession:
             rows_in=batch_len(table), rows_out=batch_len(rows),
             op_seconds=dict(ex.stats.op_seconds),
             device_of=dict(ex.stats.device_of),
+            backend_of=dict(ex.stats.backend_of),
+            compile_count=sum(getattr(b, "compile_count", 0)
+                              for b in distinct_backends.values()) - c0,
             batch_size_of={n.args["task"]: int(n.args["batch_size"])
                            for n in plan.nodes
                            if n.op == "embed" and "batch_size" in n.args},

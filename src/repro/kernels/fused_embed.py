@@ -27,17 +27,27 @@ def _kernel(x_ref, w_ref, o_ref, *, mean: float, scale: float):
                                               "interpret"))
 def fused_embed(x, w, *, mean: float = 0.0, scale: float = 1.0,
                 block_rows: int = 256, interpret: bool = False) -> jax.Array:
-    """x: [N, D]; w: [D, K] -> tanh(((x-mean)*scale) @ w) [N, K]."""
+    """x: [N, D]; w: [D, K] -> tanh(((x-mean)*scale) @ w) [N, K].
+
+    Any N is accepted: ragged row counts (the final chunk of a table not
+    divisible by the block size) are zero-padded up to a whole number of
+    blocks and the padding is sliced off the result.
+    """
     N, D = x.shape
     K = w.shape[1]
+    if N == 0:
+        return jnp.zeros((0, K), x.dtype)
     br = min(block_rows, N)
-    assert N % br == 0, (N, br)
-    return pl.pallas_call(
+    pad = (-N) % br
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    np_rows = N + pad
+    out = pl.pallas_call(
         functools.partial(_kernel, mean=mean, scale=scale),
-        grid=(N // br,),
+        grid=(np_rows // br,),
         in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
                   pl.BlockSpec((D, K), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((br, K), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, K), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((np_rows, K), x.dtype),
         interpret=interpret,
-    )(x, w)
+    )(xp, w)
+    return out[:N] if pad else out

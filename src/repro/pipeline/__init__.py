@@ -1,6 +1,10 @@
+from repro.pipeline.backend import (ExecutionBackend, InferSpec, JaxBackend,
+                                    NumpyBackend, StagedModel,
+                                    default_host_backend, make_backends)
 from repro.pipeline.batcher import (BatcherStats, ContinuousBatcher, Request,
                                     WindowBatcher, run_batched)
-from repro.pipeline.cost import (OpProfile, batch_cost, choose_batch_size,
+from repro.pipeline.cost import (DEFAULT_HW, HardwareProfile, OpProfile,
+                                 batch_cost, calibrate, choose_batch_size,
                                  choose_device, op_cost, place_dag,
                                  profile_for_model)
 from repro.pipeline.dag import Dag, Edge, Node
@@ -13,11 +17,14 @@ from repro.pipeline.share import (ShareStats, VectorShareCache, fingerprint,
                                   simd_normalize_embed)
 
 __all__ = [
+    "ExecutionBackend", "InferSpec", "JaxBackend", "NumpyBackend",
+    "StagedModel", "default_host_backend", "make_backends",
     "BatcherStats", "ContinuousBatcher", "Request", "WindowBatcher",
-    "run_batched", "OpProfile", "batch_cost", "choose_batch_size",
-    "choose_device", "op_cost", "place_dag", "profile_for_model", "Dag",
-    "Edge", "Node", "Batch", "aggregate", "batch_len", "concat_batches",
-    "filter_op", "groupby_agg", "groupby_aggs", "iter_chunks", "join",
-    "scan", "slice_batch", "window_op", "ExecStats", "PipelineExecutor",
+    "run_batched", "DEFAULT_HW", "HardwareProfile", "OpProfile",
+    "batch_cost", "calibrate", "choose_batch_size", "choose_device",
+    "op_cost", "place_dag", "profile_for_model", "Dag", "Edge", "Node",
+    "Batch", "aggregate", "batch_len", "concat_batches", "filter_op",
+    "groupby_agg", "groupby_aggs", "iter_chunks", "join", "scan",
+    "slice_batch", "window_op", "ExecStats", "PipelineExecutor",
     "ShareStats", "VectorShareCache", "fingerprint", "simd_normalize_embed",
 ]

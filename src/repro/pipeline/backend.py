@@ -1,0 +1,359 @@
+"""Execution backends: make ``Node.device`` annotations real.
+
+The planner (Eq. 10) annotates inference nodes with a device; this module
+supplies the *executors* those annotations dispatch to. A backend owns
+three responsibilities for embed/predict operators:
+
+- **staging** — weights move to the execution device once per resolved
+  task (``stage`` at ``MorphingSession.resolve_task``), never per chunk,
+  which is exactly the amortization the cost model's TransCost term
+  (Eq. 7) assumes;
+- **compiled forward** — :class:`JaxBackend` compiles each resolved
+  ``ZooModel`` forward pass (all four modes: linear/radial/relu/proj1d)
+  plus the score head into ``jax.jit``-compiled functions. The linear
+  mode routes through the fused normalize+project+tanh Pallas kernel
+  (``repro.kernels.fused_embed``): interpret mode on CPU, real Pallas on
+  TPU;
+- **shape bucketing** — ragged chunk row counts are padded to the next
+  power of two and sliced on return, so a whole query triggers at most
+  O(log n) compilations instead of one per distinct chunk length.
+  ``compile_count`` exposes the number of distinct compiled shapes (jit
+  caches per input shape) and ``on_compile`` is a hook for tests.
+
+``PipelineExecutor`` holds a registry ``{device annotation -> backend}``
+and routes each node through it; nodes without a native backend
+implementation fall back to their lowered host closure (``node.fn``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.zoo import adapt_input_width
+from repro.pipeline.batcher import BatcherStats, WindowBatcher
+
+
+@dataclass
+class InferSpec:
+    """Everything a backend needs to run one inference operator natively.
+
+    Attached to ``Node.meta['infer']`` by plan lowering; ``kind`` is
+    'embed' (features only, share-cached) or 'predict' (features + score
+    head fused). ``stats`` is the shared per-task BatcherStats sink.
+    """
+    kind: str
+    task: str
+    col: str
+    out: str
+    table: str
+    version: str
+    model: Any                       # ResolvedModel (or shim): .features,
+    #                                # .head, .zoo_model
+    batch_size: int = 32
+    share: Optional[Any] = None      # VectorShareCache
+    stats: BatcherStats = field(default_factory=BatcherStats)
+
+
+class ExecutionBackend:
+    """Base backend: share-cache plumbing + node fallback dispatch."""
+
+    name = "base"
+
+    def __init__(self):
+        # InferSpec.stats is shared across concurrent chunk runs of the
+        # same node: accumulate under a lock (same race class as
+        # ExecStats in the executor)
+        self._stats_lock = threading.Lock()
+
+    # -- staging ----------------------------------------------------------
+    def stage(self, version: str, zoo_model) -> Any:
+        """Move a resolved model's weights onto the execution device.
+        Idempotent per version; called once at resolve time."""
+        return zoo_model
+
+    # -- node dispatch ----------------------------------------------------
+    def run_node(self, node, inputs: List[Any]) -> Any:
+        spec = node.meta.get("infer") if node.meta else None
+        if spec is not None and inputs:
+            return self.run_infer(spec, inputs[0])
+        if node.fn:
+            return node.fn(*inputs)
+        return inputs[0] if inputs else None
+
+    def run_infer(self, spec: InferSpec, batch: Dict[str, np.ndarray]
+                  ) -> Dict[str, np.ndarray]:
+        res = dict(batch)
+        X = batch[spec.col]
+        if spec.kind == "embed":
+            if spec.share is not None and len(X):
+                res[spec.out] = spec.share.get_or_embed(
+                    spec.table, spec.col, np.asarray(X),
+                    lambda A: self._features(spec, A),
+                    version=spec.version)
+            else:
+                res[spec.out] = self._features(spec, X)
+        else:  # full predict: features + score head
+            res[spec.out] = self._predict(spec, X)
+        return res
+
+    # -- to implement ------------------------------------------------------
+    def _features(self, spec: InferSpec, X: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def _predict(self, spec: InferSpec, X: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+
+class NumpyBackend(ExecutionBackend):
+    """Host reference path: the resolved model's numpy forward, row-batched
+    through a WindowBatcher (paper §5.2 window-function batch inference)."""
+
+    name = "numpy"
+
+    def _batched(self, spec: InferSpec, X: np.ndarray,
+                 fn: Callable[[np.ndarray], np.ndarray]) -> np.ndarray:
+        if len(X) == 0:
+            # empty chunk: keep the true output width so cross-chunk
+            # concatenation stays shape-consistent
+            return np.asarray(fn(X))
+        wb = WindowBatcher(fn, batch_size=spec.batch_size,
+                           convert_workers=1)
+        for i in range(len(X)):
+            wb.add(i, X[i])
+        res = wb.finish()
+        st = spec.stats
+        with self._stats_lock:
+            st.batches += wb.stats.batches
+            st.rows += wb.stats.rows
+            st.infer_seconds += wb.stats.infer_seconds
+            st.convert_seconds += wb.stats.convert_seconds
+        return np.stack([np.asarray(res[i]) for i in range(len(X))])
+
+    def _features(self, spec: InferSpec, X: np.ndarray) -> np.ndarray:
+        return self._batched(spec, X, spec.model.features)
+
+    def _predict(self, spec: InferSpec, X: np.ndarray) -> np.ndarray:
+        return spec.model.head(self._batched(spec, X, spec.model.features))
+
+
+@dataclass
+class StagedModel:
+    """One resolved model, staged: device-resident weights + jitted fns."""
+    version: str
+    mode: str
+    in_dim: int
+    out_dim: int
+    features_fn: Callable            # [B, in_dim] -> [B, out_dim]
+    predict_fn: Callable             # [B, in_dim] -> [B]
+    seen_shapes: Set[Tuple[str, int]] = field(default_factory=set)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
+class JaxBackend(ExecutionBackend):
+    """jit-compiled device path with shape bucketing + one-time staging.
+
+    ``interpret`` defaults to True off-TPU (kernels run in Pallas
+    interpret mode under jit) and False on TPU. Whole chunks run as one
+    device call — the bucketing supersedes host-side window batching, so
+    ``batch_size`` annotations are telemetry-only on this backend.
+    """
+
+    name = "jax"
+
+    def __init__(self, *, interpret: Optional[bool] = None,
+                 min_bucket: int = 32, block_rows: int = 256):
+        import jax  # deferred so numpy-only paths never pay the import
+
+        super().__init__()
+        self._jax = jax
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else bool(interpret))
+        self.min_bucket = min_bucket
+        self.block_rows = block_rows
+        self._staged: Dict[str, StagedModel] = {}
+        self._lock = threading.Lock()
+        self.stage_count = 0             # actual device stagings performed
+        self.on_compile: Optional[Callable[[str, Tuple[str, int]], None]] \
+            = None
+
+    # -- staging ----------------------------------------------------------
+    def stage(self, version: str, zoo_model) -> StagedModel:
+        with self._lock:
+            if version in self._staged:
+                return self._staged[version]
+        jax, jnp = self._jax, self._jax.numpy
+        from repro.kernels.fused_embed import fused_embed
+
+        mode = zoo_model.mode
+        W = jax.device_put(jnp.asarray(zoo_model.W, jnp.float32))
+        in_dim = int(zoo_model.W.shape[0])
+        if mode == "radial":
+            centers = jax.device_put(
+                jnp.asarray(zoo_model.centers, jnp.float32))
+            inv_two_sig2 = 1.0 / (2.0 * float(zoo_model.sigma) ** 2)
+            out_dim = int(zoo_model.centers.shape[0])
+
+            def raw(X):
+                d2 = ((X[:, None, :] - centers[None]) ** 2).sum(-1)
+                return jnp.exp(-d2 * inv_two_sig2)
+        elif mode == "relu":
+            out_dim = int(zoo_model.W.shape[1])
+
+            def raw(X):
+                return jnp.maximum(X @ W, 0.0)
+        elif mode == "proj1d":
+            out_dim = 2 * int(zoo_model.W.shape[1])
+
+            def raw(X):
+                Z = X @ W
+                return jnp.tanh(jnp.concatenate([Z, Z ** 2 - 1.0], axis=1))
+        else:  # linear -> fused normalize+project+tanh Pallas kernel
+            out_dim = int(zoo_model.W.shape[1])
+            interpret = self.interpret
+            block_rows = self.block_rows
+
+            def raw(X):
+                return fused_embed(X, W, block_rows=block_rows,
+                                   interpret=interpret)
+        staged = StagedModel(
+            version=version, mode=mode, in_dim=in_dim, out_dim=out_dim,
+            features_fn=jax.jit(raw),
+            predict_fn=jax.jit(
+                lambda X: raw(X).astype(jnp.float32).mean(axis=1)))
+        with self._lock:
+            if version not in self._staged:   # lost race: first stage wins
+                self._staged[version] = staged
+                self.stage_count += 1
+        return self._staged[version]
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct compiled (fn, bucket) shapes across staged models —
+        jit compiles exactly once per new input shape."""
+        with self._lock:
+            return sum(len(s.seen_shapes) for s in self._staged.values())
+
+    # -- bucketed execution ------------------------------------------------
+    def _staged_for(self, spec: InferSpec) -> StagedModel:
+        staged = self._staged.get(spec.version)
+        if staged is None:                    # not staged at resolve: late
+            staged = self.stage(spec.version, spec.model.zoo_model)
+        return staged
+
+    def _bucketed(self, staged: StagedModel, fn_key: str, fn: Callable,
+                  X: np.ndarray, out_shape: Tuple[int, ...]) -> np.ndarray:
+        n = len(X)
+        if n == 0:
+            return np.zeros(out_shape, np.float32)
+        Xp = adapt_input_width(np.asarray(X, np.float32), staged.in_dim)
+        d = staged.in_dim
+        bucket = max(_next_pow2(n), self.min_bucket)
+        if bucket == n:                       # aligned chunk: no pad copy
+            Xb = np.ascontiguousarray(Xp)
+        else:
+            Xb = np.zeros((bucket, d), np.float32)
+            Xb[:n] = Xp
+        key = (fn_key, bucket)
+        with self._lock:
+            new_shape = key not in staged.seen_shapes
+            if new_shape:
+                staged.seen_shapes.add(key)
+        if new_shape and self.on_compile is not None:
+            self.on_compile(staged.version, key)
+        out = np.asarray(fn(Xb))
+        return out[:n]
+
+    def _features(self, spec: InferSpec, X: np.ndarray) -> np.ndarray:
+        staged = self._staged_for(spec)
+        t0 = time.perf_counter()
+        out = self._bucketed(staged, "features", staged.features_fn, X,
+                             (0, staged.out_dim))
+        dt = time.perf_counter() - t0
+        st = spec.stats
+        with self._stats_lock:
+            st.batches += 1 if len(X) else 0
+            st.rows += len(X)
+            st.infer_seconds += dt
+        return out
+
+    def _predict(self, spec: InferSpec, X: np.ndarray) -> np.ndarray:
+        staged = self._staged_for(spec)
+        t0 = time.perf_counter()
+        # the staged predict_fn fuses the *mean* score head (what
+        # ResolvedModel serves); a model carrying a custom head keeps
+        # numpy-backend parity by running features on device + head on host
+        if getattr(spec.model, "head_kind", "mean") == "mean":
+            out = self._bucketed(staged, "predict", staged.predict_fn, X,
+                                 (0,))
+        else:
+            F = self._bucketed(staged, "features", staged.features_fn, X,
+                               (0, staged.out_dim))
+            out = np.asarray(spec.model.head(F))
+        dt = time.perf_counter() - t0
+        st = spec.stats
+        with self._stats_lock:
+            st.batches += 1 if len(X) else 0
+            st.rows += len(X)
+            st.infer_seconds += dt
+        return out
+
+    # -- calibration hooks -------------------------------------------------
+    def measure_link_bandwidth(self, nbytes: int = 8 << 20,
+                               repeats: int = 3) -> float:
+        """bytes/s of the host->device staging path (device_put)."""
+        jax, jnp = self._jax, self._jax.numpy
+        buf = np.ones(nbytes // 4, np.float32)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.device_put(buf).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return buf.nbytes / max(best, 1e-9)
+
+
+_HOST_BACKEND: Optional[NumpyBackend] = None
+
+
+def default_host_backend() -> NumpyBackend:
+    """Singleton numpy backend used by lowered ``node.fn`` closures so
+    executors constructed without a registry keep working."""
+    global _HOST_BACKEND
+    if _HOST_BACKEND is None:
+        _HOST_BACKEND = NumpyBackend()
+    return _HOST_BACKEND
+
+
+def make_backends(kind: str = "auto",
+                  devices: Tuple[str, ...] = ("host", "tpu")
+                  ) -> Dict[str, ExecutionBackend]:
+    """Build the device-annotation -> backend registry.
+
+    'auto'  -> host: numpy, tpu: jax (numpy fallback if jax is missing)
+    'numpy' -> every device runs the host numpy path
+    'jax'   -> every device runs the jitted path (CPU = interpret kernels)
+    """
+    np_b = NumpyBackend()
+    if kind == "numpy":
+        return {d: np_b for d in devices}
+    if kind == "jax":
+        jb = JaxBackend()
+        return {d: jb for d in devices}
+    if kind != "auto":
+        raise ValueError(f"unknown backend kind {kind!r}")
+    reg: Dict[str, ExecutionBackend] = {}
+    for d in devices:
+        if d == "tpu":
+            try:
+                reg[d] = JaxBackend()
+            except Exception:                 # jax unavailable: degrade
+                reg[d] = np_b
+        else:
+            reg[d] = np_b
+    return reg

@@ -9,9 +9,19 @@ Devices: 'host' (CPU relational ops + small models), 'tpu' (v5e chip),
 'api' (remote endpoint; cost = end-to-end latency, Eq. 5 note). The
 decision rule (Eq. 10) picks argmin cost. Batch-size selection (Eq. 11)
 maximizes throughput subject to a memory cap and a latency bound.
+
+Hardware numbers come in two flavours: the static spec-sheet defaults
+below (``DEFAULT_HW``), and *measured* :class:`HardwareProfile` entries
+produced by :func:`calibrate`, which times the live execution backend
+(per-row throughput + launch latency from a two-point linear fit, link
+bandwidth from a staging transfer) so Eq. 10/11 decisions reflect the
+machine actually running the query. Every cost function takes an
+optional ``hw`` mapping of device name -> HardwareProfile that overrides
+the defaults.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -25,6 +35,39 @@ TPU_LAUNCH_LATENCY = 5e-5  # dispatch overhead per call (s)
 
 
 @dataclass(frozen=True)
+class HardwareProfile:
+    """Per-device throughput/latency numbers the cost model consumes.
+
+    ``flops_per_s``/``mem_bw`` bound ExecTime (Eq. 6 roofline);
+    ``link_bw`` is the host<->device staging path and ``launch_latency_s``
+    the per-call dispatch overhead (both enter TransCost, Eq. 7).
+    ``measured`` marks profiles produced by :func:`calibrate`.
+    """
+    name: str
+    flops_per_s: float
+    mem_bw: float
+    link_bw: float = float("inf")
+    launch_latency_s: float = 0.0
+    measured: bool = False
+
+
+DEFAULT_HW: Dict[str, HardwareProfile] = {
+    "host": HardwareProfile("host", HOST_FLOPS, HOST_MEM_BW),
+    "tpu": HardwareProfile("tpu", TPU_FLOPS, TPU_HBM_BW,
+                           link_bw=HOST_TO_TPU_BW,
+                           launch_latency_s=TPU_LAUNCH_LATENCY),
+}
+
+
+def _hw_for(device: str,
+            hw: Optional[Dict[str, HardwareProfile]] = None) -> HardwareProfile:
+    table = dict(DEFAULT_HW)
+    if hw:
+        table.update(hw)
+    return table.get(device, table["host"])
+
+
+@dataclass(frozen=True)
 class OpProfile:
     """Static profile of one operator instance."""
     flops_per_row: float = 0.0
@@ -33,43 +76,50 @@ class OpProfile:
     api_latency_s: float = 0.0     # >0 => remote model
 
 
-def exec_time(p: OpProfile, nrows: int, device: str) -> float:
+def exec_time(p: OpProfile, nrows: int, device: str,
+              hw: Optional[Dict[str, HardwareProfile]] = None) -> float:
     if device == "api":
         return p.api_latency_s  # end-to-end response latency (Eq. 5 note)
+    h = _hw_for(device, hw)
     flops = p.flops_per_row * nrows
     byts = p.bytes_per_row * nrows
-    if device == "tpu":
-        return max(flops / TPU_FLOPS, byts / TPU_HBM_BW)
-    return max(flops / HOST_FLOPS, byts / HOST_MEM_BW)
+    return max(flops / h.flops_per_s, byts / h.mem_bw)
 
 
-def trans_cost(p: OpProfile, nrows: int, device: str) -> float:
+def trans_cost(p: OpProfile, nrows: int, device: str,
+               hw: Optional[Dict[str, HardwareProfile]] = None) -> float:
     if device == "api":
         return 0.0
-    if device == "tpu":
-        # stage weights + move batch over the host<->device link (Eq. 7)
-        batch_bytes = p.bytes_per_row * nrows
-        return (p.model_bytes / HOST_MEM_BW
-                + (p.model_bytes + batch_bytes) / HOST_TO_TPU_BW
-                + TPU_LAUNCH_LATENCY)
-    return p.model_bytes / HOST_MEM_BW  # Eq. 9
+    host = _hw_for("host", hw)
+    if device == "host":
+        return p.model_bytes / host.mem_bw  # Eq. 9
+    h = _hw_for(device, hw)
+    # stage weights + move batch over the host<->device link (Eq. 7)
+    batch_bytes = p.bytes_per_row * nrows
+    return (p.model_bytes / host.mem_bw
+            + (p.model_bytes + batch_bytes) / h.link_bw
+            + h.launch_latency_s)
 
 
-def op_cost(p: OpProfile, nrows: int, device: str) -> float:
-    return exec_time(p, nrows, device) + trans_cost(p, nrows, device)
+def op_cost(p: OpProfile, nrows: int, device: str,
+            hw: Optional[Dict[str, HardwareProfile]] = None) -> float:
+    return exec_time(p, nrows, device, hw) + trans_cost(p, nrows, device, hw)
 
 
 def choose_device(p: OpProfile, nrows: int,
-                  devices=("host", "tpu")) -> str:
+                  devices=("host", "tpu"),
+                  hw: Optional[Dict[str, HardwareProfile]] = None) -> str:
     """Eq. 10 generalized over the available device set."""
     cand = list(devices)
     if p.api_latency_s > 0:
         cand.append("api")
-    return min(cand, key=lambda d: op_cost(p, nrows, d))
+    return min(cand, key=lambda d: op_cost(p, nrows, d, hw))
 
 
 def place_dag(dag, profiles: Dict[str, OpProfile], nrows_hint: int = 1024,
-              devices=("host", "tpu")) -> Dict[str, str]:
+              devices=("host", "tpu"),
+              hw: Optional[Dict[str, HardwareProfile]] = None
+              ) -> Dict[str, str]:
     """Plan-time device placement (Eq. 10) over an operator DAG.
 
     Annotates each ``Node.device`` in place and returns the placement map.
@@ -81,7 +131,7 @@ def place_dag(dag, profiles: Dict[str, OpProfile], nrows_hint: int = 1024,
     for op_id, node in dag.nodes.items():
         prof = profiles.get(op_id)
         if node.kind in ("predict", "embed") and prof is not None:
-            placement[op_id] = choose_device(prof, nrows_hint, devices)
+            placement[op_id] = choose_device(prof, nrows_hint, devices, hw)
         else:
             placement[op_id] = "host"
         node.device = placement[op_id]
@@ -93,8 +143,10 @@ def place_dag(dag, profiles: Dict[str, OpProfile], nrows_hint: int = 1024,
 # ---------------------------------------------------------------------------
 
 def batch_cost(p: OpProfile, batch: int, device: str,
-               *, fixed_overhead_s: float = 2e-4) -> Dict[str, float]:
-    t = op_cost(p, batch, device) + fixed_overhead_s
+               *, fixed_overhead_s: float = 2e-4,
+               hw: Optional[Dict[str, HardwareProfile]] = None
+               ) -> Dict[str, float]:
+    t = op_cost(p, batch, device, hw) + fixed_overhead_s
     return {"latency_s": t, "throughput": batch / t,
             "mem_bytes": p.bytes_per_row * batch + p.model_bytes}
 
@@ -102,13 +154,14 @@ def batch_cost(p: OpProfile, batch: int, device: str,
 def choose_batch_size(p: OpProfile, device: str, *,
                       candidates=(1, 2, 4, 8, 16, 32, 64, 128),
                       mem_cap_bytes: float = 2e9,
-                      latency_bound_s: Optional[float] = None) -> int:
+                      latency_bound_s: Optional[float] = None,
+                      hw: Optional[Dict[str, HardwareProfile]] = None) -> int:
     """argmax throughput s.t. memory cap + optional latency bound. The
     paper's observed sweet spot (8-32) falls out of the overhead/memory
     trade-off rather than being hard-coded."""
     best, best_tp = candidates[0], -1.0
     for b in candidates:
-        c = batch_cost(p, b, device)
+        c = batch_cost(p, b, device, hw=hw)
         if c["mem_bytes"] > mem_cap_bytes:
             continue
         if latency_bound_s and c["latency_s"] > latency_bound_s:
@@ -125,3 +178,78 @@ def profile_for_model(n_params: float, bytes_per_row: float,
         flops_per_row=flops_per_row if flops_per_row else 2.0 * n_params,
         bytes_per_row=bytes_per_row,
         model_bytes=n_params * dtype_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Calibration: measure the live backend instead of trusting the spec sheet
+# ---------------------------------------------------------------------------
+
+def calibrate(backend, device: str = "host", *,
+              dim: int = 32, width: int = 64,
+              rows=(256, 2048), repeats: int = 3,
+              seed: int = 0) -> HardwareProfile:
+    """Measure a :class:`HardwareProfile` from a live execution backend.
+
+    Runs a synthetic ``tanh(X @ W)`` embedder (the dominant inference
+    shape) through ``backend.run_infer`` at a small and a large row count
+    and linear-fits ``t(n) = launch + n * per_row``: the slope gives the
+    effective per-row FLOP/byte throughput, the intercept the per-call
+    launch latency — the numbers Eq. 10/11 actually need, including every
+    real overhead (batching loops, jit dispatch, padding) that spec-sheet
+    constants miss. Link bandwidth is measured from a staging transfer
+    when the backend exposes one (``measure_link_bandwidth``).
+    """
+    import numpy as np
+
+    from repro.pipeline.backend import InferSpec  # lazy import: cycle
+    from repro.pipeline.batcher import BatcherStats
+    from repro.core.zoo import ZooModel
+
+    rng = np.random.default_rng(seed)
+    W = (rng.standard_normal((dim, width)).astype(np.float32)
+         / np.sqrt(dim))
+    zm = ZooModel(name=f"__calib_{device}", source_family="gauss", W=W,
+                  mode="linear")
+    version = f"__calib_{device}@{dim}x{width}"
+    model = _CalibModel(zm)
+    spec = InferSpec(kind="embed", task="__calib__", col="x", out="f",
+                     table="__calib__", version=version, model=model,
+                     batch_size=32, share=None, stats=BatcherStats())
+    backend.stage(version, zm)
+    times = []
+    for n in rows:
+        X = rng.standard_normal((n, dim)).astype(np.float32)
+        batch = {"x": X}
+        backend.run_infer(spec, batch)          # warmup: compile + stage
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            backend.run_infer(spec, batch)
+            best = min(best, time.perf_counter() - t0)
+        times.append(best)
+    n0, n1 = int(rows[0]), int(rows[-1])
+    t0_, t1_ = times[0], times[-1]
+    per_row = max((t1_ - t0_) / max(n1 - n0, 1), 1e-12)
+    launch = max(t0_ - n0 * per_row, 0.0)
+    flops_per_row = 2.0 * dim * width + width      # matmul + tanh
+    bytes_per_row = 4.0 * (dim + width)
+    link_bw = DEFAULT_HW.get(device, DEFAULT_HW["host"]).link_bw
+    measure_link = getattr(backend, "measure_link_bandwidth", None)
+    if measure_link is not None:
+        link_bw = measure_link()
+    return HardwareProfile(
+        name=device,
+        flops_per_s=flops_per_row / per_row,
+        mem_bw=bytes_per_row / per_row,
+        link_bw=link_bw,
+        launch_latency_s=launch,
+        measured=True)
+
+
+class _CalibModel:
+    """ResolvedModel-shaped shim around a raw ZooModel for calibration."""
+
+    def __init__(self, zm):
+        self.zoo_model = zm
+        self.features = zm.features
+        self.head = lambda F: F.mean(axis=1)

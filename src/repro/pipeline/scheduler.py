@@ -12,11 +12,13 @@ time between stages' — with a configurable in-flight depth.
 """
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.pipeline.backend import ExecutionBackend
 from repro.pipeline.dag import Dag, Node
 from repro.pipeline.operators import (Batch, batch_len, concat_batches,
                                       iter_chunks, slice_batch)
@@ -27,22 +29,39 @@ class ExecStats:
     wall_seconds: float = 0.0
     op_seconds: Dict[str, float] = field(default_factory=dict)
     device_of: Dict[str, str] = field(default_factory=dict)
+    backend_of: Dict[str, str] = field(default_factory=dict)
+    calls_of: Dict[str, int] = field(default_factory=dict)
     rows_out: int = 0
 
 
 class PipelineExecutor:
-    def __init__(self, dag: Dag, *, workers: int = 4):
+    def __init__(self, dag: Dag, *, workers: int = 4,
+                 backends: Optional[Dict[str, ExecutionBackend]] = None):
         self.dag = dag
         self.workers = workers
+        self.backends = backends or {}
         self.stats = ExecStats()
+        self._stats_lock = threading.Lock()
 
     # -- execution ---------------------------------------------------------
     def _run_node(self, node: Node, inputs: List[Any]) -> Any:
-        t0 = time.time()
-        out = node.fn(*inputs) if node.fn else (inputs[0] if inputs else None)
-        self.stats.op_seconds[node.op_id] = (
-            self.stats.op_seconds.get(node.op_id, 0.0) + time.time() - t0)
-        self.stats.device_of[node.op_id] = node.device
+        backend = self.backends.get(node.device)
+        t0 = time.perf_counter()
+        if backend is not None:
+            out = backend.run_node(node, inputs)
+        else:
+            out = (node.fn(*inputs) if node.fn
+                   else (inputs[0] if inputs else None))
+        dt = time.perf_counter() - t0
+        # chunked mode runs nodes from pool threads: accumulate under the
+        # lock (dict read-modify-write is not atomic across threads)
+        with self._stats_lock:
+            s = self.stats
+            s.op_seconds[node.op_id] = s.op_seconds.get(node.op_id, 0.0) + dt
+            s.calls_of[node.op_id] = s.calls_of.get(node.op_id, 0) + 1
+            s.device_of[node.op_id] = node.device
+            s.backend_of[node.op_id] = (backend.name if backend is not None
+                                        else "fn")
         return out
 
     def execute(self, sources: Dict[str, Any]) -> Dict[str, Any]:

@@ -87,3 +87,23 @@ def test_fused_embed_sweep(dtype, N, D, K, br, mean, scale):
     err = float(jnp.abs(out.astype(jnp.float32)
                         - want.astype(jnp.float32)).max())
     assert err < _tol(dtype), err
+
+
+@pytest.mark.parametrize("N", [1, 100, 300, 511])
+def test_fused_embed_ragged_rows(N):
+    """Row counts not divisible by the block size (ragged final table
+    chunks) must pad internally and slice, not assert."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (N, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 32)) * 0.05
+    out = ops.fused_embed(x, w, block_rows=256, interpret=True)
+    want = ref.fused_embed_ref(x, w)
+    assert out.shape == (N, 32)
+    err = float(jnp.abs(out - want).max())
+    assert err < _tol(jnp.float32), err
+
+
+def test_fused_embed_zero_rows():
+    x = jnp.zeros((0, 16), jnp.float32)
+    w = jnp.ones((16, 8), jnp.float32)
+    out = ops.fused_embed(x, w, interpret=True)
+    assert out.shape == (0, 8)

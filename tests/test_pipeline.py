@@ -172,3 +172,52 @@ def test_pipeline_chunked_matches_single_shot():
     chunked = ex.execute_chunked("src", table, chunk_rows=64, sink_id="p")
     np.testing.assert_allclose(np.sort(full["p"]), np.sort(chunked["p"]),
                                rtol=1e-6)
+
+
+def test_join_duplicate_keys_both_sides_ordering():
+    """Vectorized sort-merge join must match hash-join semantics: probe
+    rows in order, ties expanded in build-side row order."""
+    left = {"k": np.array([2, 1, 2]), "x": np.array([10.0, 20.0, 30.0])}
+    right = {"k": np.array([2, 3, 2, 1]),
+             "y": np.array([1.0, 2.0, 3.0, 4.0])}
+    j = join(left, right, "k")
+    np.testing.assert_array_equal(j["k"], [2, 2, 1, 2, 2])
+    np.testing.assert_array_equal(j["x"], [10.0, 10.0, 20.0, 30.0, 30.0])
+    np.testing.assert_array_equal(j["y"], [1.0, 3.0, 4.0, 1.0, 3.0])
+
+
+def test_join_string_keys_and_column_suffix():
+    left = {"k": np.array(["a", "b", "c"]), "v": np.arange(3.0)}
+    right = {"k": np.array(["b", "c", "d"]), "v": np.array([9.0, 8.0, 7.0])}
+    j = join(left, right, "k")
+    np.testing.assert_array_equal(j["k"], ["b", "c"])
+    np.testing.assert_array_equal(j["v"], [1.0, 2.0])
+    np.testing.assert_array_equal(j["v_r"], [9.0, 8.0])
+
+
+def test_join_no_matches_and_empty_sides():
+    left = {"k": np.array([1, 2]), "x": np.array([1.0, 2.0])}
+    right = {"k": np.array([3, 4]), "y": np.array([5.0, 6.0])}
+    j = join(left, right, "k")
+    assert len(j["k"]) == 0 and len(j["y"]) == 0
+    j2 = join({"k": np.zeros(0, np.int64), "x": np.zeros(0)},
+              right, "k")
+    assert len(j2["k"]) == 0
+    j3 = join(left, {"k": np.zeros(0, np.int64), "y": np.zeros(0)}, "k")
+    assert len(j3["k"]) == 0
+
+
+def test_join_matches_naive_reference():
+    rng = np.random.default_rng(0)
+    left = {"k": rng.integers(0, 20, 200), "x": rng.standard_normal(200)}
+    right = {"k": rng.integers(0, 20, 60), "y": rng.standard_normal(60)}
+    j = join(left, right, "k")
+    li, ri = [], []
+    for i, k in enumerate(left["k"]):
+        for jj, kk in enumerate(right["k"]):
+            if k == kk:
+                li.append(i)
+                ri.append(jj)
+    np.testing.assert_array_equal(j["k"], left["k"][li])
+    np.testing.assert_allclose(j["x"], left["x"][li])
+    np.testing.assert_allclose(j["y"], right["y"][ri])
