@@ -23,6 +23,7 @@ MODULES = [
     "bench_batchsize",   # Table 3
     "bench_sharing",     # Fig 13
     "bench_engine",      # ours: end-to-end engine vs per-row inference
+    "bench_serving",     # ours: MorphingServer vs per-request execution
     "bench_roofline",    # ours: §Roofline summary
 ]
 
@@ -41,7 +42,7 @@ def main() -> int:
         except Exception:
             failed.append(mod_name)
             traceback.print_exc()
-    for artifact in ("BENCH_engine.json",):
+    for artifact in ("BENCH_engine.json", "BENCH_serving.json"):
         if os.path.exists(artifact):
             print(f"# artifact: {artifact}")
     if failed:

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Bench-regression gate: compare fresh BENCH_*.json artifacts against
+committed baselines and fail CI when the perf trajectory regresses.
+
+Rules (applied recursively over the baseline's JSON tree):
+
+- any metric named ``rows_per_s*`` / ``*rows_per_s_warm`` is
+  higher-is-better: the fresh value must stay above ``(1 - threshold)``
+  of the baseline (default threshold 0.25, i.e. a >25% warm-rows/s
+  regression fails). ``speedup_*`` ratios are not gated here — the
+  benches assert their own speedup targets;
+- any metric named ``compile_count`` must not grow: more jit compiles
+  for the same workload means shape bucketing regressed;
+- metrics present in the baseline but missing from the fresh run fail
+  (a silently dropped metric is a regression of the bench itself).
+
+Baselines live in ``benchmarks/baselines/`` and are regenerated with the
+same CLI the CI smoke uses; refresh them deliberately (commit the new
+JSON) when a PR moves the expected numbers.
+
+Usage::
+
+    python scripts/check_bench.py \
+        --pair BENCH_engine.json=benchmarks/baselines/BENCH_engine.json \
+        --pair BENCH_serving.json=benchmarks/baselines/BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+DEFAULT_THRESHOLD = 0.25
+
+# higher-is-better throughput metrics (suffix match on the key). The
+# speedup_* ratios are deliberately NOT gated: a ratio of two noisy
+# measurements amplifies noise, and the speedup properties themselves
+# are asserted inside the benches (bench_engine's jit target,
+# bench_serving's 2x serving target).
+_HIGHER_BETTER = ("rows_per_s", "rows_per_s_warm")
+# cold numbers include compile time and are too noisy to gate on
+_SKIP = ("rows_per_s_cold", "naive_rows_per_s")
+
+
+def _walk(tree: dict, prefix: str = "") -> Iterator[Tuple[str, float]]:
+    for key, val in tree.items():
+        path = f"{prefix}.{key}" if prefix else key
+        if isinstance(val, dict):
+            yield from _walk(val, path)
+        elif isinstance(val, (int, float)) and not isinstance(val, bool):
+            yield path, float(val)
+
+
+def _lookup(tree: dict, path: str):
+    node = tree
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def check_pair(fresh: dict, baseline: dict, threshold: float,
+               label: str) -> List[str]:
+    failures: List[str] = []
+    for path, base_val in _walk(baseline):
+        key = path.rsplit(".", 1)[-1]
+        fresh_val = _lookup(fresh, path)
+        if key.endswith(_SKIP):
+            continue
+        if key.endswith(_HIGHER_BETTER):
+            if fresh_val is None:
+                failures.append(f"{label}: metric {path} missing from "
+                                "fresh run")
+                continue
+            floor = base_val * (1.0 - threshold)
+            status = "OK" if fresh_val >= floor else "FAIL"
+            print(f"[{status}] {label}:{path} fresh={fresh_val:.1f} "
+                  f"baseline={base_val:.1f} floor={floor:.1f}")
+            if fresh_val < floor:
+                failures.append(
+                    f"{label}: {path} regressed "
+                    f"{fresh_val:.1f} < {floor:.1f} "
+                    f"(baseline {base_val:.1f}, threshold "
+                    f"{threshold:.0%})")
+        elif key == "compile_count":
+            if fresh_val is None:
+                failures.append(f"{label}: metric {path} missing from "
+                                "fresh run")
+                continue
+            status = "OK" if fresh_val <= base_val else "FAIL"
+            print(f"[{status}] {label}:{path} fresh={fresh_val:.0f} "
+                  f"baseline={base_val:.0f} (must not grow)")
+            if fresh_val > base_val:
+                failures.append(
+                    f"{label}: {path} grew {fresh_val:.0f} > "
+                    f"{base_val:.0f} — shape bucketing regressed")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pair", action="append", required=True,
+                    metavar="FRESH=BASELINE",
+                    help="fresh artifact and committed baseline "
+                         "(repeatable)")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="allowed fractional rows/s regression "
+                         "(default 0.25)")
+    args = ap.parse_args(argv)
+    failures: List[str] = []
+    for pair in args.pair:
+        fresh_path, _, base_path = pair.partition("=")
+        if not base_path:
+            ap.error(f"--pair must be FRESH=BASELINE, got {pair!r}")
+        label = Path(fresh_path).name
+        try:
+            fresh = json.loads(Path(fresh_path).read_text())
+        except FileNotFoundError:
+            failures.append(f"{label}: fresh artifact {fresh_path} "
+                            "not found")
+            continue
+        baseline = json.loads(Path(base_path).read_text())
+        failures.extend(check_pair(fresh, baseline, args.threshold, label))
+    if failures:
+        print("\nbench-regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbench-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,7 @@ vector-share cache. `MorphingSession` is the single entry point.
 from repro.engine.plan import (CompileContext, LogicalPlan, PlanNode,
                                annotate_plan, compile_plan, insert_embeds,
                                optimize, push_down_filters)
+from repro.engine.serve import (MorphingServer, ServeResult, ServerStats)
 from repro.engine.session import (MorphingSession, QueryReport, QueryResult,
                                   ResolvedModel)
 from repro.engine.sql import (CreateTaskStmt, QueryStmt, SelectItem,
@@ -14,6 +15,7 @@ from repro.engine.sql import (CreateTaskStmt, QueryStmt, SelectItem,
 __all__ = [
     "CompileContext", "LogicalPlan", "PlanNode", "annotate_plan",
     "compile_plan", "insert_embeds", "optimize", "push_down_filters",
+    "MorphingServer", "ServeResult", "ServerStats",
     "MorphingSession", "QueryReport", "QueryResult", "ResolvedModel",
     "CreateTaskStmt", "QueryStmt", "SelectItem", "TaskCall", "parse",
     "tokenize",

@@ -1,0 +1,311 @@
+"""MorphingServer: the continuous-batching serving path of the engine.
+
+Batch analytics (``MorphingSession.sql``) plans one big query; the online
+regime is many small concurrent ``PREDICT ... USING TASK`` requests
+arriving inside the DBMS. Paying the full parse/plan/chunked-executor
+machinery per request wastes exactly the overheads the cost model says
+batching amortizes, so the server keeps one *lane* per task:
+
+- admission goes through a long-running :class:`ContinuousBatcher`
+  (start/submit/result/stop, results condition variable, drain-on-stop);
+- same-task requests are coalesced into cost-model-sized batches — the
+  lane's row budget comes from Eq. 11 (``choose_batch_size`` over the
+  task's calibrated :class:`HardwareProfile`), with the batcher counting
+  payload *rows*, not requests;
+- each coalesced batch executes through the task's staged
+  :class:`ExecutionBackend` (weights staged once at resolve, jit shapes
+  bucketed), so stage/compile costs amortize across requests exactly as
+  TransCost (Eq. 7) assumes;
+- resolution rides the session's partial-load path: on a decoupled
+  store, a lane's model loads only the layers its requests need, and
+  ``ServerStats`` reports loaded-vs-stored bytes next to the latency
+  percentiles.
+
+    server = MorphingServer(session=sess).start()
+    rid = server.submit("PREDICT emb USING TASK sent FROM reviews "
+                        "WHERE len > 20")
+    out = server.result(rid)          # ServeResult: scores + latency
+    server.stats().p95_latency_s
+    server.stop()                     # drains the queues, joins workers
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.zoo import adapt_input_width
+from repro.engine.session import MorphingSession
+from repro.engine.sql import QueryStmt, parse
+from repro.engine.plan import _make_pred
+from repro.pipeline.backend import InferSpec, default_host_backend
+from repro.pipeline.batcher import BatcherStats, ContinuousBatcher, Request
+from repro.pipeline.cost import choose_batch_size, choose_device
+
+# Eq. 11 candidates for the serving row budget: lanes coalesce many
+# requests, so the sweep extends past the per-operator 8-128 window.
+_LANE_BATCH_CANDIDATES = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+@dataclass
+class ServeResult:
+    """One served PREDICT request."""
+    req_id: int
+    task: str
+    scores: np.ndarray
+    rows: int
+    latency_s: float
+
+
+@dataclass
+class ServerStats:
+    """Aggregate serving telemetry across all task lanes."""
+    requests: int = 0
+    rows: int = 0
+    batches: int = 0
+    requests_by_task: Dict[str, int] = field(default_factory=dict)
+    mean_coalesced: float = 0.0      # requests fused per executed batch
+    p50_latency_s: float = 0.0
+    p95_latency_s: float = 0.0
+    max_latency_s: float = 0.0
+    infer_seconds: float = 0.0
+    loaded_bytes: int = 0            # model bytes read from disk
+    stored_bytes: int = 0            # model bytes held by the store
+
+    @property
+    def rows_per_second(self) -> float:
+        return self.rows / self.infer_seconds if self.infer_seconds else 0.0
+
+
+@dataclass
+class _Lane:
+    """Per-task serving lane: one batcher + one staged backend spec."""
+    task: str
+    device: str
+    batcher: ContinuousBatcher
+    spec: InferSpec
+    batch_rows: int
+    requests: int = 0
+
+
+class MorphingServer:
+    """Concurrent PREDICT requests -> per-task continuous batching.
+
+    Wraps a :class:`MorphingSession` (constructing one from ``**session_kw``
+    when not given — the session auto-calibrates unless opted out, so
+    lane batch sizes come from measured hardware profiles). The server
+    only accepts ``PREDICT col USING TASK t FROM table [WHERE ...]``
+    statements; analytics SQL belongs on ``session.sql``.
+    """
+
+    def __init__(self, session: Optional[MorphingSession] = None, *,
+                 max_wait_s: float = 0.002, idle_wait_s: float = 0.05,
+                 mem_cap_bytes: float = 2e9, nrows_hint: int = 2048,
+                 **session_kw):
+        self.session = session or MorphingSession(**session_kw)
+        self.max_wait_s = max_wait_s
+        self.idle_wait_s = idle_wait_s
+        self.mem_cap_bytes = mem_cap_bytes
+        self.nrows_hint = nrows_hint
+        self._lanes: Dict[str, _Lane] = {}
+        self._task_of: Dict[int, str] = {}
+        self._ids = itertools.count()
+        self._lock = threading.Lock()
+        self._running = False
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "MorphingServer":
+        with self._lock:
+            if self._running:
+                raise RuntimeError("server already started")
+            self._running = True
+            for lane in self._lanes.values():
+                lane.batcher.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop every lane. With ``drain`` (default) queued requests are
+        served before the workers join; otherwise they are dropped and
+        their ``result()`` calls raise."""
+        with self._lock:
+            if not self._running:
+                return
+            self._running = False
+            lanes = list(self._lanes.values())
+        for lane in lanes:
+            lane.batcher.stop(drain=drain)
+
+    def __enter__(self) -> "MorphingServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- request admission -------------------------------------------------
+    def _parse_predict(self, sql: str) -> Tuple[str, str, str, list]:
+        stmt = parse(sql)
+        ops = stmt.plan.ops() if isinstance(stmt, QueryStmt) else []
+        if ops not in (["scan", "predict"], ["scan", "predict", "filter"]):
+            raise ValueError(
+                "MorphingServer serves PREDICT ... USING TASK statements; "
+                "run analytics SQL through MorphingSession.sql")
+        pred = next(n for n in stmt.plan.nodes if n.op == "predict")
+        preds = [p for n in stmt.plan.nodes if n.op == "filter"
+                 for p in n.args["preds"]]
+        return pred.args["task"], pred.args["col"], stmt.plan.table, preds
+
+    def _rows_for(self, table: str, col: str, preds: list) -> np.ndarray:
+        tab = self.session.tables[table]
+        X = np.asarray(tab[col])
+        if preds:
+            X = X[_make_pred(preds)(tab)]
+        return X
+
+    def _lane_for(self, task: str) -> _Lane:
+        lane = self._lanes.get(task)
+        if lane is not None:
+            return lane
+        with self._lock:
+            lane = self._lanes.get(task)
+            if lane is not None:
+                return lane
+            sess = self.session
+            rm = sess.models[task]
+            device = choose_device(rm.profile, self.nrows_hint,
+                                   sess.devices, sess.hw)
+            backend = sess.backends.get(device) or default_host_backend()
+            batch_rows = choose_batch_size(
+                rm.profile, device, candidates=_LANE_BATCH_CANDIDATES,
+                mem_cap_bytes=self.mem_cap_bytes, hw=sess.hw)
+            spec = InferSpec(
+                kind="predict", task=task, col="x", out="y",
+                table="__serve__", version=rm.version, model=rm,
+                batch_size=batch_rows, share=None, stats=BatcherStats())
+
+            def step(payloads: List[np.ndarray],
+                     _b=backend, _s=spec) -> List[np.ndarray]:
+                lens = [len(p) for p in payloads]
+                out = np.asarray(
+                    _b.run_infer(_s, {"x": _stack(payloads)})["y"])
+                offs = np.cumsum([0] + lens)
+                return [out[a:b] for a, b in zip(offs[:-1], offs[1:])]
+
+            batcher = ContinuousBatcher(
+                step, batch_size=batch_rows, size_of=len,
+                max_wait_s=self.max_wait_s, idle_wait_s=self.idle_wait_s)
+            lane = _Lane(task=task, device=device, batcher=batcher,
+                         spec=spec, batch_rows=batch_rows)
+            if self._running:
+                batcher.start()
+            self._lanes[task] = lane
+            return lane
+
+    def resolve_task(self, name: str, X: np.ndarray, y: np.ndarray,
+                     **kw) -> None:
+        """Resolve a task ahead of traffic (partial-load aware)."""
+        with self._lock:
+            if name not in self.session.models:
+                self.session.resolve_task(name, X, y, **kw)
+
+    def submit(self, sql: str,
+               sample: Optional[Tuple[np.ndarray, np.ndarray]] = None
+               ) -> int:
+        """Admit one PREDICT statement; returns its request id. The rows
+        the statement selects are snapshotted at admission (the window
+        the request observed) and coalesced with other requests for the
+        same task."""
+        task, col, table, preds = self._parse_predict(sql)
+        if not self._running:
+            raise RuntimeError(
+                "server not started: call start() or use 'with server:'")
+        if task not in self.session.models:
+            if sample is None:
+                raise RuntimeError(
+                    f"task {task} unresolved and no sample given")
+            self.resolve_task(task, *sample)
+        lane = self._lane_for(task)
+        X = self._rows_for(table, col, preds)
+        req_id = next(self._ids)
+        # bookkeeping only after a successful admission (submit raises
+        # when racing a stop()); counter writes go under the lock
+        lane.batcher.submit(Request(req_id, X))
+        self._task_of[req_id] = task
+        with self._lock:
+            lane.requests += 1
+        return req_id
+
+    def result(self, req_id: int,
+               timeout: Optional[float] = None) -> ServeResult:
+        """Block until the request's batch has executed. Each result is
+        retrievable once: returning it releases the server's per-request
+        state (long-running services stay memory-bounded)."""
+        task = self._task_of[req_id]
+        lane = self._lanes[task]
+        try:
+            scores = lane.batcher.result(req_id, timeout=timeout,
+                                         evict=False)
+            latency = lane.batcher.latency(req_id)
+        except TimeoutError:
+            raise                        # still pending: retry result()
+        except BaseException:
+            lane.batcher.evict(req_id)   # failed: release the slot
+            self._task_of.pop(req_id, None)
+            raise
+        lane.batcher.evict(req_id)
+        self._task_of.pop(req_id, None)
+        return ServeResult(req_id=req_id, task=task,
+                           scores=np.asarray(scores), rows=len(scores),
+                           latency_s=latency)
+
+    def predict(self, sql: str,
+                sample: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+                timeout: Optional[float] = None) -> ServeResult:
+        """submit + result convenience for a single caller thread."""
+        return self.result(self.submit(sql, sample=sample),
+                           timeout=timeout)
+
+    # -- telemetry ---------------------------------------------------------
+    def stats(self) -> ServerStats:
+        st = ServerStats()
+        lat: List[float] = []
+        coalesced: List[int] = []
+        with self._lock:
+            lanes = list(self._lanes.values())
+        for lane in lanes:
+            lane_lat, lane_sizes = lane.batcher.telemetry()
+            st.requests += lane.requests
+            st.requests_by_task[lane.task] = lane.requests
+            st.rows += lane.spec.stats.rows
+            st.batches += len(lane_sizes)
+            st.infer_seconds += lane.spec.stats.infer_seconds
+            lat.extend(lane_lat)
+            coalesced.extend(lane_sizes)
+        if coalesced:
+            st.mean_coalesced = float(np.mean(coalesced))
+        if lat:
+            st.p50_latency_s = float(np.percentile(lat, 50))
+            st.p95_latency_s = float(np.percentile(lat, 95))
+            st.max_latency_s = float(np.max(lat))
+        # bytes are scoped to tasks actually served through a lane — a
+        # shared session's analytics-only resolutions don't belong in
+        # serving telemetry
+        for lane in lanes:
+            rm = self.session.models.get(lane.task)
+            if rm is not None:
+                st.loaded_bytes += rm.loaded_bytes
+                st.stored_bytes += rm.stored_bytes
+        return st
+
+
+def _stack(payloads: List[np.ndarray]) -> np.ndarray:
+    """Concatenate request payloads, width-adapting narrower ones so
+    requests over differently-shaped tables can share a batch (the
+    backend re-adapts to the model's input width anyway)."""
+    arrs = [np.asarray(p, np.float32) for p in payloads]
+    if len(arrs) == 1:
+        return arrs[0]
+    width = max(a.shape[1] for a in arrs)
+    return np.concatenate([adapt_input_width(a, width) for a in arrs])

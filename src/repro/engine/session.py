@@ -20,7 +20,9 @@ view.
 """
 from __future__ import annotations
 
+import dataclasses
 import tempfile
+import threading
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -32,7 +34,8 @@ from repro.core.zoo import ZooModel
 from repro.engine.plan import (CompileContext, LogicalPlan, compile_plan,
                                optimize)
 from repro.engine.sql import CreateTaskStmt, QueryStmt, parse
-from repro.pipeline.backend import ExecutionBackend, make_backends
+from repro.pipeline.backend import (ExecutionBackend, JaxBackend,
+                                    NumpyBackend, make_backends)
 from repro.pipeline.batcher import BatcherStats
 from repro.pipeline.cost import (HardwareProfile, OpProfile, calibrate,
                                  profile_for_model)
@@ -41,12 +44,13 @@ from repro.pipeline.operators import (Batch, aggregate, batch_len,
 from repro.pipeline.scheduler import PipelineExecutor
 from repro.pipeline.share import VectorShareCache
 from repro.storage.catalog import Catalog
-from repro.storage.stores import BlobStore
+from repro.storage.stores import BlobStore, DecoupledStore
 
 
 @dataclass
 class ResolvedModel:
-    """A task's model, loaded back through the BLOB store."""
+    """A task's model, loaded back through a model store (BLOB or
+    decoupled layer tables with partial loading)."""
     task: str
     model_id: str
     version: str
@@ -56,6 +60,34 @@ class ResolvedModel:
     zoo_model: Optional[ZooModel] = None           # raw weights (staging)
     head_kind: str = "mean"          # 'mean' lets device backends fuse the
     #                                # head; anything else runs head on host
+    store: str = "blob"              # which store served the weights
+    load_mode: str = "full"          # full | partial | head
+    loaded_bytes: int = 0            # disk bytes this resolution read
+    stored_bytes: int = 0            # bytes the store holds for the model
+
+
+class _LazyZooModel:
+    """Defers a trunk load until the first attribute access — a head-only
+    resolution never pays for trunk weights unless an embed actually
+    needs them (share-cache hits keep the trunk on disk)."""
+
+    def __init__(self, loader: Callable[[], ZooModel]):
+        self._loader = loader
+        self._zm: Optional[ZooModel] = None
+        self._force_lock = threading.Lock()
+
+    @property
+    def materialized(self) -> bool:
+        return self._zm is not None
+
+    def _force(self) -> ZooModel:
+        with self._force_lock:
+            if self._zm is None:
+                self._zm = self._loader()
+            return self._zm
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._force(), name)
 
 
 @dataclass
@@ -77,6 +109,8 @@ class QueryReport:
     batch_batches: int = 0
     batch_rows: int = 0
     batch_infer_seconds: float = 0.0
+    loaded_bytes: int = 0           # model bytes read from disk (resolution)
+    stored_bytes: int = 0           # model bytes the store holds
 
     @property
     def share_hit_rate(self) -> float:
@@ -90,6 +124,37 @@ class QueryResult:
     report: QueryReport
 
 
+# Process-wide fast-calibration cache. Calibration measures the *machine*
+# (per-row throughput, launch latency, link BW of a backend class), not a
+# session, so one measurement per backend flavour serves every session in
+# the process — tier-1 tests constructing dozens of sessions pay once.
+_FAST_CALIB_CACHE: Dict[Tuple[str, Any], HardwareProfile] = {}
+_FAST_CALIB_LOCK = threading.Lock()
+_FAST_CALIB_ROWS = (64, 512)
+
+
+def _fast_profile(backend: ExecutionBackend,
+                  device: str) -> Optional[HardwareProfile]:
+    """Measured HardwareProfile for a backend's *class* (memoized). A
+    fresh probe instance of the same flavour is calibrated so the live
+    backend's stage/compile counters stay untouched."""
+    if isinstance(backend, JaxBackend):
+        key = ("jax", backend.interpret)
+        probe_fn = lambda: JaxBackend(interpret=backend.interpret)  # noqa: E731
+    elif isinstance(backend, NumpyBackend):
+        key = ("numpy", None)
+        probe_fn = NumpyBackend
+    else:
+        return None                  # unknown backend: keep spec defaults
+    with _FAST_CALIB_LOCK:
+        prof = _FAST_CALIB_CACHE.get(key)
+        if prof is None:
+            prof = calibrate(probe_fn(), device, rows=_FAST_CALIB_ROWS,
+                             repeats=1)
+            _FAST_CALIB_CACHE[key] = prof
+    return dataclasses.replace(prof, name=device)
+
+
 class MorphingSession:
     """Register tables -> create tasks -> resolve models -> run SQL."""
 
@@ -99,11 +164,17 @@ class MorphingSession:
                  backend: str = "auto", enable_share: bool = True,
                  chunk_rows: int = 256, max_inflight: int = 3,
                  workers: int = 4, optimize_plans: bool = True,
-                 share_capacity_bytes: int = 1 << 30):
+                 share_capacity_bytes: int = 1 << 30,
+                 model_store: str = "blob",
+                 auto_calibrate: bool = True):
+        if model_store not in ("blob", "decoupled"):
+            raise ValueError(f"unknown model_store {model_store!r}")
         self.root = Path(root) if root else Path(
             tempfile.mkdtemp(prefix="morphingdb-"))
         self.catalog = Catalog(self.root / "catalog")
         self.blobs = BlobStore(self.root / "models", self.catalog)
+        self.dstore = DecoupledStore(self.root / "layers", self.catalog)
+        self.model_store = model_store
         self.share = VectorShareCache(self.root / "share",
                                       capacity_bytes=share_capacity_bytes)
         self.registry = TaskRegistry(selector=selector, zoo=zoo)
@@ -119,6 +190,23 @@ class MorphingSession:
         self.optimize_plans = optimize_plans
         self.tables: Dict[str, Batch] = {}
         self.models: Dict[str, ResolvedModel] = {}
+        if auto_calibrate:
+            self._auto_calibrate()
+
+    def _auto_calibrate(self) -> None:
+        """Fast calibration at construction (ROADMAP open item): use the
+        process-wide memoized profiles so Eq. 10/11 planning starts from
+        measured numbers without each session paying a measurement. Full
+        per-session measurement stays available via :meth:`calibrate`."""
+        try:
+            hw = {}
+            for dev, b in self.backends.items():
+                prof = _fast_profile(b, dev)
+                if prof is not None:
+                    hw[dev] = prof
+            self.hw = hw or None
+        except Exception:            # calibration must never block startup
+            self.hw = None
 
     # -- catalog-facing API ----------------------------------------------
     def register_table(self, name: str, table: Batch) -> None:
@@ -128,23 +216,63 @@ class MorphingSession:
         self.registry.create_task(spec)
 
     def resolve_task(self, name: str, X: np.ndarray, y: np.ndarray,
-                     force: bool = False) -> ResolvedModel:
+                     force: bool = False,
+                     mode: Optional[str] = None) -> ResolvedModel:
         """Select a model for the task from sample data, persist it via
-        the BLOB store + catalog, and load the weights back from storage
-        (the served model is the stored one, not the in-memory zoo
-        object)."""
+        the session's model store + catalog, and load the weights back
+        from storage (the served model is the stored one, not the
+        in-memory zoo object).
+
+        ``mode`` controls the decoupled store's load shape (ignored for
+        the BLOB store, which is all-or-nothing):
+
+        - ``'full'``    — every layer eagerly (the default);
+        - ``'partial'`` — the head eagerly plus a *width-sliced* trunk:
+          only the first ``X.shape[1]`` rows of the projection leave the
+          disk (``load_layer_rows``), since width-adapted inputs zero the
+          rest; radial trunks load centers and skip the projection.
+          Explicit opt-in: the slice is keyed to the resolution sample's
+          width, so the sample must match the serving schema (queries
+          over *wider* columns would be truncated to the slice);
+        - ``'head'``    — only the head eagerly; the trunk stays on disk
+          until an embed actually needs it (share-cache hits never pay).
+        """
         if not force and name in self.models:
-            return self.models[name]
+            cached = self.models[name]
+            if (mode is not None and cached.store == "decoupled"
+                    and cached.load_mode != mode):
+                raise ValueError(
+                    f"task {name!r} already resolved with load mode "
+                    f"{cached.load_mode!r}; pass force=True to "
+                    f"re-resolve as {mode!r}")
+            return cached
         idx = self.registry.resolve(name, X, y, force=force)
         zm = self.zoo[idx]
         spec = self.registry.get(name)
+        if self.model_store == "decoupled":
+            rm = self._resolve_decoupled(name, zm, spec, X,
+                                         mode=mode or "full")
+        else:
+            rm = self._resolve_blob(name, zm, spec)
+        self.models[name] = rm
+        return rm
+
+    def _stage_all(self, rm: ResolvedModel, stored: ZooModel) -> None:
+        # one-time weight staging: each distinct backend moves the stored
+        # weights to its device now, not per chunk (TransCost, Eq. 7)
+        for b in {id(b): b for b in self.backends.values()}.values():
+            b.stage(rm.version, stored)
+
+    def _resolve_blob(self, name: str, zm: ZooModel,
+                      spec: TaskSpec) -> ResolvedModel:
         params: Dict[str, np.ndarray] = {"W": zm.W}
         if zm.centers is not None:
             params["centers"] = zm.centers
         arch = {"name": zm.name, "mode": zm.mode, "sigma": float(zm.sigma),
                 "source_family": zm.source_family}
-        self.blobs.save(zm.name, arch, params,
-                        task_types=[spec.kind], modality=spec.input_type)
+        path = self.blobs.save(zm.name, arch, params,
+                               task_types=[spec.kind],
+                               modality=spec.input_type)
         arch2, flat = self.blobs.load(zm.name)
         stored = ZooModel(name=arch2["name"],
                           source_family=arch2["source_family"],
@@ -153,18 +281,121 @@ class MorphingSession:
                                    if "centers" in flat else None),
                           sigma=arch2["sigma"])
         dim = stored.W.shape[0]
+        nbytes = path.stat().st_size
         rm = ResolvedModel(
             task=name, model_id=zm.name, version=f"{zm.name}@1.0",
             features=stored.features,
             head=lambda F: np.asarray(F, np.float32).mean(axis=1),
             profile=profile_for_model(n_params=float(stored.W.size),
                                       bytes_per_row=dim * 4),
-            zoo_model=stored)
-        # one-time weight staging: each distinct backend moves the stored
-        # weights to its device now, not per chunk (TransCost, Eq. 7)
-        for b in {id(b): b for b in self.backends.values()}.values():
-            b.stage(rm.version, stored)
-        self.models[name] = rm
+            zoo_model=stored, store="blob", load_mode="full",
+            loaded_bytes=nbytes, stored_bytes=nbytes)
+        self._stage_all(rm, stored)
+        return rm
+
+    # -- decoupled store: partial-load resolution -------------------------
+    @staticmethod
+    def _trunk_out_dim(zm: ZooModel) -> int:
+        if zm.mode == "radial":
+            return int(zm.centers.shape[0])
+        if zm.mode == "proj1d":
+            return 2 * int(zm.W.shape[1])
+        return int(zm.W.shape[1])
+
+    def _load_trunk(self, model_id: str, arch: dict,
+                    width_limit: Optional[int] = None) -> ZooModel:
+        """Materialize a trunk from layer tables. ``width_limit`` slices
+        the projection to the rows the input width actually touches."""
+        in_dim = int(arch["in_dim"])
+        if arch["mode"] == "radial":
+            # radial features are distances to centers; the stored
+            # projection (identity) never runs, so it never loads
+            _, flat = self.dstore.load(
+                model_id, layer_filter=lambda n: n == "trunk/centers")
+            return ZooModel(name=arch["name"],
+                            source_family=arch["source_family"],
+                            W=np.eye(in_dim, dtype=np.float32),
+                            mode="radial",
+                            centers=np.asarray(flat["trunk/centers"]),
+                            sigma=arch["sigma"])
+        if width_limit is not None and width_limit < in_dim:
+            W = np.asarray(self.dstore.load_layer_rows(
+                model_id, "trunk/W", 0, width_limit))
+        else:
+            _, flat = self.dstore.load(
+                model_id, layer_filter=lambda n: n == "trunk/W")
+            W = np.asarray(flat["trunk/W"])
+        return ZooModel(name=arch["name"],
+                        source_family=arch["source_family"],
+                        W=W, mode=arch["mode"], sigma=arch["sigma"])
+
+    def _resolve_decoupled(self, name: str, zm: ZooModel, spec: TaskSpec,
+                           X: np.ndarray, mode: str) -> ResolvedModel:
+        if mode not in ("full", "partial", "head"):
+            raise ValueError(f"unknown load mode {mode!r}")
+        out_dim = self._trunk_out_dim(zm)
+        arch = {"name": zm.name, "mode": zm.mode, "sigma": float(zm.sigma),
+                "source_family": zm.source_family,
+                "in_dim": int(zm.W.shape[0]), "out_dim": out_dim}
+        try:
+            already = (self.catalog.get_model(zm.name).storage
+                       == "decoupled")
+        except KeyError:
+            already = False
+        if not already:
+            # layer tables: trunk/* (expensive extractor weights) +
+            # head/* (the score head — a mean readout stored explicitly
+            # so a head-only load has a real layer to fetch)
+            params: Dict[str, np.ndarray] = {
+                "trunk/W": zm.W,
+                "head/w": np.full(out_dim, 1.0 / out_dim, np.float32)}
+            if zm.centers is not None:
+                params["trunk/centers"] = zm.centers
+            self.dstore.save(zm.name, arch, params,
+                             task_types=[spec.kind],
+                             modality=spec.input_type)
+        b0 = self.dstore.stats.loaded_bytes
+        arch2, head_flat = self.dstore.load(
+            zm.name, layer_filter=lambda n: n.startswith("head/"))
+        w_head = np.asarray(head_flat["head/w"], np.float32)
+        head_bytes = self.dstore.stats.loaded_bytes - b0
+        width_limit = (int(np.asarray(X).shape[1])
+                       if mode == "partial" else None)
+        # a width-sliced trunk is a distinct embedder for inputs wider
+        # than the sample — tag the version so share-cache entries and
+        # staged weights never cross between the slices
+        sliced = (width_limit is not None
+                  and width_limit < int(arch2["in_dim"]))
+        version = (f"{zm.name}@1.0+w{width_limit}" if sliced
+                   else f"{zm.name}@1.0")
+        rm = ResolvedModel(
+            task=name, model_id=zm.name, version=version,
+            features=None, head=None,
+            profile=profile_for_model(n_params=float(zm.W.size),
+                                      bytes_per_row=int(arch2["in_dim"]) * 4),
+            zoo_model=None, store="decoupled", load_mode=mode,
+            loaded_bytes=head_bytes,
+            stored_bytes=self.dstore.stored_bytes(zm.name))
+        rm.head = lambda F, _w=w_head: np.asarray(F, np.float32) @ _w
+
+        def load_trunk() -> ZooModel:
+            s0 = self.dstore.stats.loaded_bytes
+            stored = self._load_trunk(zm.name, arch2,
+                                      width_limit=width_limit)
+            rm.loaded_bytes += self.dstore.stats.loaded_bytes - s0
+            return stored
+
+        if mode == "head":
+            lazy = _LazyZooModel(load_trunk)
+            rm.zoo_model = lazy
+            rm.features = lambda A, _l=lazy: _l._force().features(A)
+            # no eager staging: backends late-stage through the lazy
+            # proxy on the first embed that actually misses the cache
+        else:
+            stored = load_trunk()
+            rm.zoo_model = stored
+            rm.features = stored.features
+            self._stage_all(rm, stored)
         return rm
 
     def calibrate(self, rows=(256, 2048),
@@ -246,6 +477,10 @@ class MorphingSession:
                            if n.op == "embed" and "batch_size" in n.args},
             share_hits=self.share.stats.hits - h0,
             share_misses=self.share.stats.misses - m0)
+        for t in report.resolution:
+            m = self.models[t]
+            report.loaded_bytes += m.loaded_bytes
+            report.stored_bytes += m.stored_bytes
         for st in ctx.batcher_stats.values():
             report.batch_batches += st.batches
             report.batch_rows += st.rows

@@ -8,16 +8,22 @@ parallel and run as one batch; (3) cleanup + result caching — results are
 re-associated with row ids and raw rows released.
 
 ``ContinuousBatcher`` is the serving-engine version: an admission queue
-with cost-model-selected batch size and waiting-time bound.
+with cost-model-selected batch size and waiting-time bound. It runs
+either as a one-shot loop (``run(total)``) or as a long-lived service
+(``start()`` / ``submit()`` / ``result()`` / ``stop()``) whose worker
+thread coalesces queued requests into batches and publishes results
+through a condition variable — the serving-path sibling of the
+window-function batcher.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -109,54 +115,246 @@ class Request:
     arrival: float = field(default_factory=time.time)
 
 
+class _Failure:
+    """Sentinel wrapping a step_fn exception so result() can re-raise."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
 class ContinuousBatcher:
-    """Admission queue -> cost-model batch size -> batched step loop."""
+    """Admission queue -> cost-model batch size -> batched step loop.
+
+    Two usage modes:
+
+    - one-shot: ``submit()`` requests, then ``run(total)`` serves exactly
+      ``total`` of them on the calling thread and returns their results;
+    - service: ``start()`` spawns a worker thread, concurrent producers
+      ``submit()`` and block on ``result(req_id)`` (a condition variable
+      wakes them as batches complete), ``stop(drain=True)`` serves what
+      is still queued before joining the worker.
+
+    ``batch_size`` is chosen by the cost model (Eq. 11) and measured in
+    payload units: by default one request = one unit, but a ``size_of``
+    hook lets multi-row payloads count their rows so coalesced serving
+    batches match the cost-model-sized row budget rather than a request
+    count. Duplicate ``req_id`` submissions raise (a silent overwrite
+    would drop one requester's result).
+    """
 
     def __init__(self, step_fn: Callable[[List[Any]], List[Any]],
-                 profile: OpProfile, device: str = "tpu",
+                 profile: Optional[OpProfile] = None, device: str = "tpu",
                  max_wait_s: float = 0.01, idle_wait_s: float = 0.1,
-                 mem_cap_bytes: float = 2e9):
+                 mem_cap_bytes: float = 2e9,
+                 batch_size: Optional[int] = None,
+                 size_of: Optional[Callable[[Any], int]] = None,
+                 hw: Optional[Dict[str, Any]] = None,
+                 telemetry_window: int = 10000):
         self.step_fn = step_fn
-        self.batch_size = choose_batch_size(profile, device,
-                                            mem_cap_bytes=mem_cap_bytes)
+        if batch_size is not None:
+            self.batch_size = max(1, int(batch_size))
+        else:
+            if profile is None:
+                raise ValueError("need an OpProfile or explicit batch_size")
+            self.batch_size = choose_batch_size(profile, device,
+                                                mem_cap_bytes=mem_cap_bytes,
+                                                hw=hw)
         self.max_wait_s = max_wait_s
         self.idle_wait_s = idle_wait_s
+        self.size_of = size_of or (lambda _p: 1)
         self._q: "queue.Queue[Request]" = queue.Queue()
+        self._cv = threading.Condition()
         self._results: Dict[int, Any] = {}
-        self._done = threading.Event()
-        self.latencies: List[float] = []
+        self._latency_of: Dict[int, float] = {}
+        self._submitted: Set[int] = set()
+        self._pending = 0                    # submitted but not yet served
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        # telemetry is windowed so a long-running service doesn't grow
+        # without bound; per-request state is evicted by result()
+        self.latencies: "deque[float]" = deque(maxlen=telemetry_window)
+        self.batch_sizes: "deque[int]" = deque(maxlen=telemetry_window)
 
-    def submit(self, req: Request) -> None:
-        self._q.put(req)
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        with self._cv:
+            if req.req_id in self._submitted:
+                raise ValueError(f"duplicate req_id {req.req_id!r}")
+            if self._stop.is_set():
+                raise RuntimeError("batcher is stopped")
+            self._submitted.add(req.req_id)
+            self._pending += 1
+            # enqueue under the cv so the stop check and the put are
+            # atomic w.r.t. stop(drain=False)'s queue drain — a request
+            # can be admitted or rejected, never accepted-then-orphaned
+            self._q.put(req)
+        return req.req_id
 
-    def _collect(self) -> List[Request]:
+    def _collect(self, limit: Optional[int] = None) -> List[Request]:
         # Block on the first request (bounded by idle_wait_s) so an empty
         # queue parks the thread in the OS wait instead of busy-spinning.
         try:
             batch = [self._q.get(timeout=self.idle_wait_s)]
         except queue.Empty:
             return []
+        units = self.size_of(batch[0].payload)
         deadline = time.time() + self.max_wait_s
-        while len(batch) < self.batch_size:
+        while units < self.batch_size and (limit is None
+                                           or len(batch) < limit):
             timeout = deadline - time.time()
             if timeout <= 0:
                 break
             try:
-                batch.append(self._q.get(timeout=timeout))
+                req = self._q.get(timeout=timeout)
             except queue.Empty:
                 break
+            batch.append(req)
+            units += self.size_of(req.payload)
         return batch
 
-    def run(self, total: int) -> Dict[int, Any]:
-        served = 0
-        while served < total:
-            batch = self._collect()
-            if not batch:
-                continue
-            outs = self.step_fn([r.payload for r in batch])
-            now = time.time()
+    # -- serving -----------------------------------------------------------
+    def _serve(self, batch: List[Request]) -> Optional[Exception]:
+        """Run one step and publish its results; a step error is stored
+        per request (surfaced by ``result()``) and returned."""
+        err: Optional[Exception] = None
+        try:
+            outs: List[Any] = list(self.step_fn([r.payload
+                                                 for r in batch]))
+            if len(outs) != len(batch):
+                raise RuntimeError(
+                    f"step_fn returned {len(outs)} results for "
+                    f"{len(batch)} requests")
+        except Exception as e:      # surfaced via result() / run()
+            err = e
+            outs = [_Failure(e)] * len(batch)
+        now = time.time()
+        with self._cv:
             for r, o in zip(batch, outs):
                 self._results[r.req_id] = o
+                self._latency_of[r.req_id] = now - r.arrival
                 self.latencies.append(now - r.arrival)
+            self._pending -= len(batch)
+            self.batch_sizes.append(len(batch))
+            self._cv.notify_all()
+        return err
+
+    def run(self, total: int) -> Dict[int, Any]:
+        """Serve exactly ``total`` queued requests on the calling thread
+        and raise on the first step error (one-shot mode has no
+        ``result()`` call to surface failures through). Collection is
+        capped at the remaining count so a batch never crosses the
+        ``total`` boundary (no overcounting when ``total`` is not a
+        batch multiple)."""
+        served = 0
+        while served < total:
+            batch = self._collect(limit=total - served)
+            if not batch:
+                continue
+            err = self._serve(batch)
+            if err is not None:
+                raise err
             served += len(batch)
-        return self._results
+        return dict(self._results)
+
+    # -- service lifecycle -------------------------------------------------
+    def start(self) -> "ContinuousBatcher":
+        if self._thread is not None:
+            raise RuntimeError("batcher already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while True:
+            batch = self._collect()
+            if batch:
+                self._serve(batch)
+            elif self._stop.is_set() and self._q.empty():
+                # drain contract: only exit once the queue is empty
+                return
+
+    def result(self, req_id: int, timeout: Optional[float] = None, *,
+               evict: bool = True) -> Any:
+        """Block until ``req_id`` has been served and return its output
+        (re-raising the step error if its batch failed). With ``evict``
+        (default) the request's stored result and bookkeeping are
+        released — each result is retrievable once, which is what keeps
+        a long-running service's memory bounded."""
+        with self._cv:
+            if req_id not in self._submitted:
+                raise KeyError(f"unknown req_id {req_id!r}")
+            ok = self._cv.wait_for(lambda: req_id in self._results,
+                                   timeout=timeout)
+            if not ok:
+                raise TimeoutError(f"req_id {req_id!r} not served in time")
+            if evict:
+                out = self._results.pop(req_id)
+                self._latency_of.pop(req_id, None)
+                self._submitted.discard(req_id)
+            else:
+                out = self._results[req_id]
+        if isinstance(out, _Failure):
+            raise out.error
+        return out
+
+    def stop(self, drain: bool = True,
+             timeout: Optional[float] = None) -> Dict[int, Any]:
+        """Shut the worker down. With ``drain`` (default) every queued
+        request is served first; otherwise unserved requests are dropped
+        and their ``result()`` calls fail."""
+        # _stop is set inside the cv block so submit()'s check-and-put
+        # is atomic against it: a request is either rejected, failed
+        # here (drain=False), or guaranteed served by the drain
+        with self._cv:
+            if not drain:
+                dropped = []
+                while True:
+                    try:
+                        dropped.append(self._q.get_nowait())
+                    except queue.Empty:
+                        break
+                for r in dropped:
+                    self._results[r.req_id] = _Failure(
+                        RuntimeError("batcher stopped before serving "
+                                     f"req_id {r.req_id!r}"))
+                self._pending -= len(dropped)
+            self._stop.set()
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+        elif drain:
+            # never started: no worker owns the drain, so serve the
+            # queue inline — stop() must not orphan admitted requests
+            while not self._q.empty():
+                batch = self._collect()
+                if batch:
+                    self._serve(batch)
+        return dict(self._results)
+
+    def latency(self, req_id: int) -> float:
+        """Queue-to-completion latency of a served request (seconds)."""
+        with self._cv:
+            return self._latency_of[req_id]
+
+    def evict(self, req_id: int) -> None:
+        """Release a served request's stored result and bookkeeping."""
+        with self._cv:
+            self._results.pop(req_id, None)
+            self._latency_of.pop(req_id, None)
+            self._submitted.discard(req_id)
+
+    def telemetry(self) -> Tuple[List[float], List[int]]:
+        """Consistent snapshot of (latencies, batch sizes) — the live
+        deques mutate under the worker thread, so readers must not
+        iterate them directly."""
+        with self._cv:
+            return list(self.latencies), list(self.batch_sizes)
+
+    @property
+    def pending(self) -> int:
+        with self._cv:
+            return self._pending

@@ -2,11 +2,11 @@ from repro.storage import mvec
 from repro.storage.catalog import Catalog, LayerInfo, ModelInfo
 from repro.storage.checkpoint import CheckpointManager
 from repro.storage.stores import (ApiModelRegistry, BlobStore,
-                                  DecoupledStore, flatten_params,
-                                  unflatten_like)
+                                  DecoupledStore, StoreStats,
+                                  flatten_params, unflatten_like)
 
 __all__ = [
     "mvec", "Catalog", "LayerInfo", "ModelInfo", "CheckpointManager",
-    "ApiModelRegistry", "BlobStore", "DecoupledStore", "flatten_params",
-    "unflatten_like",
+    "ApiModelRegistry", "BlobStore", "DecoupledStore", "StoreStats",
+    "flatten_params", "unflatten_like",
 ]

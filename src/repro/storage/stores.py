@@ -10,9 +10,12 @@ from __future__ import annotations
 
 import io
 import json
+import os
 import pickle
+import threading
 import time
 import zlib
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -97,18 +100,41 @@ class BlobStore:
 # Decoupled store
 # ---------------------------------------------------------------------------
 
+@dataclass
+class StoreStats:
+    """I/O accounting for partial loading: how many bytes actually came
+    off disk vs were served from the in-memory layer cache. Partial-load
+    wins are exactly ``loaded_bytes`` staying below the stored size."""
+    loads: int = 0               # load() / load_layer_rows() calls
+    partial_loads: int = 0       # calls that read a subset (filter/slice)
+    loaded_bytes: int = 0        # bytes read from disk
+    cache_hits: int = 0
+    cache_hit_bytes: int = 0     # bytes served from the layer cache
+
+
 class DecoupledStore:
     """Architecture/parameters separation with per-layer Mvec files.
 
     Supports: partial loading (subset of layers), fine-tune *deltas*
     (store only changed layers referencing a base model), and
     range reads within a layer (Mvec slicing) for per-shard restore.
+
+    Every read is accounted in :class:`StoreStats`, and layer tensors are
+    cached in memory keyed by their *resolved* file path — delta layers
+    reference base-model files, so two models sharing a trunk share one
+    cached tensor (the NeurStore-style cross-model reuse).
     """
 
-    def __init__(self, root: Path, catalog: Optional[Catalog] = None):
+    def __init__(self, root: Path, catalog: Optional[Catalog] = None,
+                 cache_layers: bool = True):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.catalog = catalog or Catalog(self.root / "_catalog")
+        self.cache_layers = cache_layers
+        self._layer_cache: Dict[Tuple[str, Optional[Tuple[int, int]]],
+                                np.ndarray] = {}
+        self._cache_lock = threading.Lock()
+        self.stats = StoreStats()
 
     def _dir(self, model_id: str) -> Path:
         return self.root / model_id
@@ -121,6 +147,10 @@ class DecoupledStore:
         that differ from the base are written (delta storage)."""
         d = self._dir(model_id)
         d.mkdir(parents=True, exist_ok=True)
+        prefix = str(d) + os.sep   # separator: 'm1' must not evict 'm10'
+        with self._cache_lock:   # rewritten layer files invalidate caches
+            self._layer_cache = {k: v for k, v in self._layer_cache.items()
+                                 if not k[0].startswith(prefix)}
         (d / "architecture.json").write_text(json.dumps(arch_meta, indent=1))
         flat = flatten_params(params)
         base_flat: Dict[str, Any] = {}
@@ -158,24 +188,45 @@ class DecoupledStore:
             param_count=int(sum(np.asarray(v).size for v in flat.values()))))
         return d
 
-    def _read_layer_file(self, model_id: str, li: LayerInfo,
-                         rows: Optional[Tuple[int, int]] = None):
+    def _layer_path(self, model_id: str, li: LayerInfo) -> Path:
         file = li.file
         if file.startswith("@"):  # delta reference into the base model
             ref_model, ref_file = file[1:].split("/", 1)
-            path = self._dir(ref_model) / ref_file
-        else:
-            path = self._dir(model_id) / file
+            return self._dir(ref_model) / ref_file
+        return self._dir(model_id) / file
+
+    def _read_layer_file(self, model_id: str, li: LayerInfo,
+                         rows: Optional[Tuple[int, int]] = None):
+        path = self._layer_path(model_id, li)
+        key = (str(path), rows)
+        if self.cache_layers:
+            with self._cache_lock:
+                cached = self._layer_cache.get(key)
+            if cached is not None:
+                self.stats.cache_hits += 1
+                self.stats.cache_hit_bytes += cached.nbytes
+                return cached
         with open(path, "rb") as f:
             if rows is not None:
-                return mvec.read_slice(f, rows[0], rows[1])
-            return mvec.decode(f.read())
+                arr = mvec.read_slice(f, rows[0], rows[1])
+                self.stats.loaded_bytes += arr.nbytes
+            else:
+                buf = f.read()
+                arr = mvec.decode(buf)
+                self.stats.loaded_bytes += len(buf)
+        if self.cache_layers:
+            with self._cache_lock:
+                self._layer_cache[key] = arr
+        return arr
 
     def load(self, model_id: str, template=None,
              layer_filter: Optional[Callable[[str], bool]] = None):
         """Full or partial load. ``layer_filter(name)`` selects layers."""
         arch = json.loads((self._dir(model_id) / "architecture.json")
                           .read_text())
+        self.stats.loads += 1
+        if layer_filter is not None:
+            self.stats.partial_loads += 1
         flat = {}
         for li in self.catalog.get_layers(model_id):
             if layer_filter and not layer_filter(li.layer_name):
@@ -187,9 +238,12 @@ class DecoupledStore:
 
     def load_layer_rows(self, model_id: str, layer_name: str,
                         start: int, stop: int):
-        """Range read within one layer (per-shard restore path)."""
+        """Range read within one layer (per-shard restore / width-sliced
+        trunk path): only the requested rows' bytes leave the disk."""
         for li in self.catalog.get_layers(model_id):
             if li.layer_name == layer_name:
+                self.stats.loads += 1
+                self.stats.partial_loads += 1
                 return self._read_layer_file(model_id, li, rows=(start, stop))
         raise KeyError(layer_name)
 

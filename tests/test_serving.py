@@ -1,0 +1,473 @@
+"""Serving path: ContinuousBatcher lifecycle, MorphingServer coalescing,
+and partial-load resolution byte accounting on the DecoupledStore."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import make_task, pretrain_model
+from repro.core.task import TaskSpec
+from repro.engine import MorphingServer, MorphingSession
+from repro.pipeline import ContinuousBatcher, OpProfile, Request
+from repro.storage import Catalog, DecoupledStore
+
+PROF = OpProfile(flops_per_row=1e5, bytes_per_row=128, model_bytes=1e6)
+
+
+# -- fixtures --------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_zoo():
+    rng = np.random.default_rng(3)
+    src = make_task(rng, "gauss", n=120, dim=16, classes=3)
+    ring = make_task(rng, "ring", n=120, dim=16, classes=3)
+    return [pretrain_model(src, width=12, seed=1, name="m0"),
+            pretrain_model(ring, width=12, seed=2, name="m1",
+                           mode="radial")]
+
+
+@pytest.fixture(scope="module")
+def table():
+    rng = np.random.default_rng(0)
+    n = 600
+    return {"gender": rng.integers(0, 2, n),
+            "len": rng.integers(1, 200, n),
+            "emb": rng.standard_normal((n, 16)).astype(np.float32)}
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return make_task(np.random.default_rng(1), "gauss", n=128, dim=16,
+                     classes=3)
+
+
+def make_session(tmp_path, zoo, table, *, model_store="decoupled",
+                 backend="numpy", resolution=0, **kw):
+    sess = MorphingSession(zoo=zoo, root=tmp_path, model_store=model_store,
+                          backend=backend, **kw)
+    sess.register_table("reviews", {k: v.copy() for k, v in table.items()})
+    sess.create_task(TaskSpec("sent", "series", ("P", "N")))
+    sess.registry._resolution["sent"] = resolution
+    return sess
+
+
+# -- ContinuousBatcher lifecycle ------------------------------------------
+
+def test_batcher_duplicate_req_id_raises():
+    cb = ContinuousBatcher(lambda xs: xs, PROF, device="host")
+    cb.submit(Request(1, 1.0))
+    with pytest.raises(ValueError, match="duplicate"):
+        cb.submit(Request(1, 2.0))
+
+
+def test_batcher_run_returns_exactly_the_submitted_set():
+    """total not a batch multiple: run() must not overcount past total."""
+    calls = []
+
+    def step(ps):
+        calls.append(len(ps))
+        return [p * 2 for p in ps]
+
+    cb = ContinuousBatcher(step, PROF, device="host", max_wait_s=0.001)
+    for i in range(10):
+        cb.submit(Request(i, float(i)))
+    res = cb.run(total=7)
+    assert sum(calls) == 7          # exactly 7 served, 3 still queued
+    assert len(res) == 7
+    rest = cb.run(total=3)
+    assert set(rest) == set(range(10))
+
+
+def test_batcher_service_mode_concurrent_submitters():
+    cb = ContinuousBatcher(lambda xs: [x + 1 for x in xs], PROF,
+                           device="host", max_wait_s=0.002,
+                           idle_wait_s=0.01).start()
+    ids = list(range(40))
+
+    def client(lo):
+        for i in range(lo, lo + 10):
+            cb.submit(Request(i, float(i)))
+
+    threads = [threading.Thread(target=client, args=(lo,))
+               for lo in range(0, 40, 10)]
+    for t in threads:
+        t.start()
+    outs = {i: cb.result(i, timeout=5.0) for i in ids}
+    for t in threads:
+        t.join()
+    cb.stop()
+    assert outs == {i: i + 1.0 for i in ids}
+    assert len(cb.latencies) == 40
+    assert max(cb.batch_sizes) > 1      # actually coalesced
+
+
+def test_batcher_stop_drains_queue():
+    served = []
+
+    def slow_step(ps):
+        time.sleep(0.01)
+        served.extend(ps)
+        return ps
+
+    cb = ContinuousBatcher(slow_step, PROF, device="host",
+                           max_wait_s=0.001, idle_wait_s=0.01).start()
+    for i in range(25):
+        cb.submit(Request(i, i))
+    cb.stop(drain=True)
+    assert sorted(served) == list(range(25))
+    with pytest.raises(RuntimeError, match="stopped"):
+        cb.submit(Request(99, 1))
+
+
+def test_batcher_stop_without_drain_fails_pending():
+    release = threading.Event()
+
+    def blocked_step(ps):
+        release.wait(1.0)
+        return ps
+
+    cb = ContinuousBatcher(blocked_step, PROF, device="host",
+                           batch_size=1, max_wait_s=0.0,
+                           idle_wait_s=0.01).start()
+    cb.submit(Request(0, 0))
+    time.sleep(0.05)                 # worker is inside step 0
+    for i in range(1, 8):
+        cb.submit(Request(i, i))
+    cb.stop(drain=False)
+    release.set()
+    dropped = 0
+    for i in range(8):
+        try:
+            cb.result(i, timeout=1.0)
+        except RuntimeError:
+            dropped += 1
+    assert dropped > 0               # queued requests were failed, not lost
+
+
+def test_batcher_stop_drains_inline_when_never_started():
+    """stop(drain=True) with no worker thread must serve the queue on
+    the calling thread rather than orphan admitted requests."""
+    cb = ContinuousBatcher(lambda xs: [x * 3 for x in xs], PROF,
+                           device="host", max_wait_s=0.001,
+                           idle_wait_s=0.01)
+    for i in range(5):
+        cb.submit(Request(i, float(i)))
+    res = cb.stop(drain=True)
+    assert res == {i: i * 3.0 for i in range(5)}
+
+
+def test_batcher_step_error_propagates_to_result():
+    def bad_step(ps):
+        raise RuntimeError("boom")
+
+    cb = ContinuousBatcher(bad_step, PROF, device="host",
+                           idle_wait_s=0.01).start()
+    cb.submit(Request(0, 1.0))
+    with pytest.raises(RuntimeError, match="boom"):
+        cb.result(0, timeout=5.0)
+    cb.stop()
+
+
+def test_batcher_run_raises_step_error():
+    """One-shot mode has no result() call: run() must fail loudly, not
+    hand back internal failure sentinels as model outputs."""
+    cb = ContinuousBatcher(lambda ps: 1 / 0, PROF, device="host",
+                           max_wait_s=0.001)
+    cb.submit(Request(0, 1.0))
+    with pytest.raises(ZeroDivisionError):
+        cb.run(total=1)
+
+
+def test_batcher_result_evicts_by_default():
+    """Service mode must stay memory-bounded: a result is retrievable
+    once, then its stored state is released."""
+    cb = ContinuousBatcher(lambda xs: xs, PROF, device="host",
+                           idle_wait_s=0.01).start()
+    cb.submit(Request(0, 1.0))
+    assert cb.result(0, timeout=5.0) == 1.0
+    with pytest.raises(KeyError):
+        cb.result(0, timeout=0.1)            # evicted
+    cb.submit(Request(0, 2.0))               # req_id slot is reusable
+    assert cb.result(0, timeout=5.0) == 2.0
+    cb.stop()
+
+
+def test_batcher_row_aware_sizing():
+    """size_of counts payload rows: the row budget, not the request
+    count, closes a batch."""
+    sizes = []
+    cb = ContinuousBatcher(lambda xs: xs, batch_size=100, size_of=len,
+                           max_wait_s=0.05, idle_wait_s=0.01)
+    for i in range(6):
+        cb.submit(Request(i, list(range(40))))    # 40 rows each
+    cb.run(total=6)
+    # 100-row budget -> 3 requests (120 rows) per batch, not all 6
+    assert max(cb.batch_sizes) <= 3
+
+
+# -- MorphingServer --------------------------------------------------------
+
+def test_server_concurrent_submitters_match_engine(tmp_path, serve_zoo,
+                                                   table, sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    ref = {thr: sess.sql(f"PREDICT emb USING TASK sent FROM reviews "
+                         f"WHERE len > {thr}").rows["_score"]
+           for thr in (20, 60, 100)}
+    server = MorphingServer(session=sess, max_wait_s=0.002)
+    with server:
+        ids = {}
+
+        def client(thr):
+            ids[thr] = [server.submit(
+                "PREDICT emb USING TASK sent FROM reviews "
+                f"WHERE len > {thr}") for _ in range(4)]
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in (20, 60, 100)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for thr, rids in ids.items():
+            for rid in rids:
+                out = server.result(rid, timeout=10.0)
+                np.testing.assert_allclose(out.scores, ref[thr],
+                                           atol=1e-5)
+                assert out.latency_s >= 0.0
+
+
+def test_server_coalesces_same_task_requests(tmp_path, serve_zoo, table,
+                                             sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess, max_wait_s=0.05)
+    with server:
+        rids = [server.submit("PREDICT emb USING TASK sent FROM reviews "
+                              "WHERE len > 150") for _ in range(12)]
+        for rid in rids:
+            server.result(rid, timeout=10.0)
+    st = server.stats()
+    assert st.requests == 12
+    assert st.batches < 12                   # requests shared batches
+    assert st.mean_coalesced > 1.0
+    assert st.rows > 0 and st.infer_seconds > 0.0
+
+
+def test_server_stats_latency_percentiles(tmp_path, serve_zoo, table,
+                                          sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess)
+    with server:
+        for rid in [server.submit("PREDICT emb USING TASK sent "
+                                  "FROM reviews") for _ in range(6)]:
+            server.result(rid, timeout=10.0)
+    st = server.stats()
+    assert 0.0 < st.p50_latency_s <= st.p95_latency_s <= st.max_latency_s
+    assert st.requests_by_task == {"sent": 6}
+    assert st.stored_bytes > 0
+
+
+def test_server_stop_drains_submitted_requests(tmp_path, serve_zoo, table,
+                                               sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess, max_wait_s=0.001).start()
+    rids = [server.submit("PREDICT emb USING TASK sent FROM reviews")
+            for _ in range(10)]
+    server.stop(drain=True)                  # no result() calls yet
+    for rid in rids:
+        out = server.result(rid, timeout=0.1)   # already served
+        assert out.rows == 600
+
+
+def test_server_rejects_analytics_sql(tmp_path, serve_zoo, table, sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    server = MorphingServer(session=sess)
+    with pytest.raises(ValueError, match="PREDICT"):
+        server.submit("SELECT gender, AVG(sent(emb)) FROM reviews "
+                      "GROUP BY gender")
+
+
+def test_server_submit_before_start_raises(tmp_path, serve_zoo, table,
+                                           sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess)
+    with pytest.raises(RuntimeError, match="not started"):
+        server.submit("PREDICT emb USING TASK sent FROM reviews")
+
+
+def test_server_resolves_on_first_request(tmp_path, serve_zoo, table,
+                                          sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    server = MorphingServer(session=sess)
+    with server:
+        out = server.predict("PREDICT emb USING TASK sent FROM reviews",
+                             sample=(sample.X, sample.y), timeout=10.0)
+    assert out.rows == 600
+    assert "sent" in sess.models
+
+
+def test_server_jax_backend_parity(tmp_path, serve_zoo, table, sample):
+    ref_sess = make_session(tmp_path / "np", serve_zoo, table)
+    ref_sess.resolve_task("sent", sample.X, sample.y)
+    ref = ref_sess.sql("PREDICT emb USING TASK sent FROM reviews "
+                       "WHERE len > 50").rows["_score"]
+    sess = make_session(tmp_path / "jax", serve_zoo, table, backend="jax")
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess)
+    with server:
+        out = server.predict("PREDICT emb USING TASK sent FROM reviews "
+                             "WHERE len > 50", timeout=30.0)
+    np.testing.assert_allclose(out.scores, ref, atol=1e-5)
+
+
+# -- partial-load resolution ----------------------------------------------
+
+def test_decoupled_loaded_bytes_accounting(tmp_path):
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat, cache_layers=False)
+    W = np.arange(64, dtype=np.float32).reshape(16, 4)
+    ds.save("m", {"v": 1}, {"trunk/W": W,
+                            "head/w": np.ones(4, np.float32)})
+    _, flat = ds.load("m")
+    full_bytes = ds.stats.loaded_bytes
+    assert full_bytes >= W.nbytes + 16      # payload + headers
+    assert ds.stats.loads == 1 and ds.stats.partial_loads == 0
+
+    _, head = ds.load("m", layer_filter=lambda n: n.startswith("head/"))
+    head_bytes = ds.stats.loaded_bytes - full_bytes
+    assert set(head) == {"head/w"}
+    assert 0 < head_bytes < W.nbytes
+    assert ds.stats.partial_loads == 1
+
+
+def test_decoupled_load_layer_rows_counts_slice_bytes(tmp_path):
+    ds = DecoupledStore(tmp_path / "dec", cache_layers=False)
+    W = np.arange(128, dtype=np.float32).reshape(16, 8)
+    ds.save("m", {"v": 1}, {"trunk/W": W})
+    part = ds.load_layer_rows("m", "trunk/W", 0, 4)
+    np.testing.assert_array_equal(part, W[:4])
+    assert ds.stats.loaded_bytes == part.nbytes       # only the slice
+    assert ds.stats.partial_loads == 1
+
+
+def test_decoupled_layer_cache_shares_across_loads(tmp_path):
+    ds = DecoupledStore(tmp_path / "dec")
+    W = np.ones((8, 4), np.float32)
+    ds.save("m", {"v": 1}, {"trunk/W": W})
+    ds.load("m")
+    first = ds.stats.loaded_bytes
+    ds.load("m")                             # second load: cache tier
+    assert ds.stats.loaded_bytes == first
+    assert ds.stats.cache_hits == 1
+    assert ds.stats.cache_hit_bytes == W.nbytes
+
+
+def test_layer_cache_save_keeps_prefix_sibling_models(tmp_path):
+    """Saving 'm1' must not evict cached layers of 'm10'."""
+    ds = DecoupledStore(tmp_path / "dec")
+    W = np.ones((8, 4), np.float32)
+    ds.save("m10", {"v": 1}, {"trunk/W": W})
+    ds.load("m10")
+    ds.save("m1", {"v": 1}, {"trunk/W": 2 * W})
+    ds.load("m10")                           # still cache-served
+    assert ds.stats.cache_hits == 1
+
+
+def test_partial_resolution_slices_trunk_width(tmp_path, serve_zoo):
+    """A narrow table only pulls the trunk rows its width touches."""
+    rng = np.random.default_rng(0)
+    table8 = {"len": rng.integers(1, 200, 200),
+              "emb": rng.standard_normal((200, 8)).astype(np.float32)}
+    sess = make_session(tmp_path, serve_zoo, table8)
+    sample8 = make_task(np.random.default_rng(2), "gauss", n=96, dim=8,
+                        classes=3)
+    rm = sess.resolve_task("sent", sample8.X, sample8.y, mode="partial")
+    assert rm.loaded_bytes < rm.stored_bytes
+    assert "+w8" in rm.version               # slice-tagged embedder
+    res = sess.sql("PREDICT emb USING TASK sent FROM reviews "
+                   "WHERE len > 50")
+    assert res.report.loaded_bytes < res.report.stored_bytes
+    # parity: zero-padded inputs through the full trunk give the same
+    # scores as the sliced trunk
+    full = make_session(tmp_path / "full", serve_zoo, table8)
+    full.resolve_task("sent", sample8.X, sample8.y, mode="full")
+    ref = full.sql("PREDICT emb USING TASK sent FROM reviews "
+                   "WHERE len > 50")
+    np.testing.assert_allclose(res.rows["_score"], ref.rows["_score"],
+                               atol=1e-5)
+
+
+def test_head_only_resolution_skips_trunk_on_share_hit(tmp_path,
+                                                       serve_zoo, table,
+                                                       sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y, mode="full")
+    sess.sql("PREDICT emb USING TASK sent FROM reviews")  # warm share
+    sess.dstore.cache_layers = False         # count true disk bytes
+    sess.create_task(TaskSpec("sent2", "series", ("P", "N")))
+    sess.registry._resolution["sent2"] = 0
+    rm2 = sess.resolve_task("sent2", sample.X, sample.y, mode="head")
+    res = sess.sql("PREDICT emb USING TASK sent2 FROM reviews")
+    assert not rm2.zoo_model.materialized    # share hits: trunk on disk
+    assert 0 < rm2.loaded_bytes < rm2.stored_bytes
+    ref = sess.sql("PREDICT emb USING TASK sent FROM reviews")
+    np.testing.assert_allclose(res.rows["_score"], ref.rows["_score"],
+                               atol=1e-5)
+
+
+def test_resolve_mode_conflict_with_cached_resolution(tmp_path,
+                                                      serve_zoo, table,
+                                                      sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)       # default: full
+    with pytest.raises(ValueError, match="force=True"):
+        sess.resolve_task("sent", sample.X, sample.y, mode="head")
+
+    class _Pinned:                       # force re-runs selection
+        def select(self, X, y):
+            return type("R", (), {"chosen": 0})()
+
+    sess.registry.selector = _Pinned()
+    rm = sess.resolve_task("sent", sample.X, sample.y, mode="head",
+                           force=True)
+    assert rm.load_mode == "head"
+
+
+def test_head_mode_lazily_loads_trunk_on_cold_embed(tmp_path, serve_zoo,
+                                                    table, sample):
+    sess = make_session(tmp_path, serve_zoo, table, enable_share=False)
+    rm = sess.resolve_task("sent", sample.X, sample.y, mode="head")
+    head_bytes = rm.loaded_bytes
+    assert not rm.zoo_model.materialized
+    sess.sql("PREDICT emb USING TASK sent FROM reviews")  # cold: needs it
+    assert rm.zoo_model.materialized
+    assert rm.loaded_bytes > head_bytes
+
+
+def test_radial_partial_skips_projection(tmp_path, serve_zoo, table,
+                                         sample):
+    sess = make_session(tmp_path, serve_zoo, table, resolution=1)
+    rm = sess.resolve_task("sent", sample.X, sample.y, mode="partial")
+    assert rm.loaded_bytes < rm.stored_bytes     # identity W never read
+    res = sess.sql("PREDICT emb USING TASK sent FROM reviews "
+                   "WHERE len > 50")
+    blob = make_session(tmp_path / "blob", serve_zoo, table,
+                        model_store="blob", resolution=1)
+    blob.resolve_task("sent", sample.X, sample.y)
+    ref = blob.sql("PREDICT emb USING TASK sent FROM reviews "
+                   "WHERE len > 50")
+    np.testing.assert_allclose(res.rows["_score"], ref.rows["_score"],
+                               atol=1e-5)
+
+
+def test_auto_calibrate_populates_measured_hw(tmp_path, serve_zoo):
+    sess = MorphingSession(zoo=serve_zoo, root=tmp_path, backend="numpy")
+    assert sess.hw and all(p.measured for p in sess.hw.values())
+    off = MorphingSession(zoo=serve_zoo, root=tmp_path / "off",
+                          backend="numpy", auto_calibrate=False)
+    assert off.hw is None
