@@ -1,17 +1,22 @@
 """Serving-path ablation: per-request query execution vs the
 continuous-batching ``MorphingServer`` on the same concurrent
-``PREDICT ... USING TASK`` workload, plus the partial-load resolution
-story (loaded-vs-stored bytes on the decoupled store).
+``PREDICT ... USING TASK`` workload; the share-aware trunk-lane server
+vs per-task full-predict lanes on an *overlapping-request* workload
+(where warm rows should cost head-only work); plus the partial-load
+resolution story (loaded-vs-stored bytes on the decoupled store).
 
 Run directly for machine-readable output::
 
     PYTHONPATH=src:. python benchmarks/bench_serving.py \
         --requests 64 --rows 2000 --json BENCH_serving.json
 
-``BENCH_serving.json`` records warm rows/s for both paths, the server's
-p50/p95 latency and coalescing factor, and the partial-load byte
-accounting, so the serving perf trajectory is tracked per PR (gated by
-``scripts/check_bench.py`` in CI).
+``BENCH_serving.json`` records warm rows/s for all paths, the server's
+p50/p95 latency (measured over a post-warmup telemetry window: the
+server is ``reset_telemetry()``-ed after warmup so percentiles never mix
+pre- and post-warmup samples), share-hit/dedup rates, coalescing factor,
+and the partial-load byte accounting, so the serving perf trajectory is
+tracked per PR (gated by ``scripts/check_bench.py`` in CI, including a
+p95 tail-latency ceiling).
 """
 from __future__ import annotations
 
@@ -31,16 +36,23 @@ from repro.engine import MorphingServer, MorphingSession
 N_ROWS = 2000
 N_REQUESTS = 64
 CONCURRENCY = 8
-# below this the 2x speedup target is recorded but not asserted (thread
+# below this the speedup targets are recorded but not asserted (thread
 # startup and compile overheads dominate tiny request counts)
 MIN_REQUESTS_FOR_ASSERT = 32
 TARGET_SPEEDUP = 2.0
+# share-aware trunk lanes vs the per-task full-predict lanes on the
+# overlapping workload: warm rows approach head-only cost
+TARGET_SHARE_SPEEDUP = 1.5
+# the overlap ablation runs a wider trunk so the embed stage carries the
+# cost the share cache is supposed to remove
+OVERLAP_TRUNK_WIDTH = 160
 
 
-def _setup(n_rows: int, dim: int = 16):
+def _setup(n_rows: int, dim: int = 16, width: int = 24,
+           name: str = "serve-m0"):
     rng = np.random.default_rng(3)
     src = make_task(rng, "gauss", n=160, dim=dim, classes=3)
-    zoo = [pretrain_model(src, width=24, seed=1, name="serve-m0")]
+    zoo = [pretrain_model(src, width=width, seed=1, name=name)]
     rng = np.random.default_rng(0)
     table = {"gender": rng.integers(0, 2, n_rows),
              "len": rng.integers(1, 200, n_rows),
@@ -88,19 +100,35 @@ def bench_per_request(sess, stmts, concurrency: int) -> float:
         return best
 
 
-def bench_server(server, stmts, concurrency: int):
-    """Same statements through the continuous-batching server."""
+def bench_server(server, stmts, concurrency: int, warm_all: bool = False):
+    """Same statements through the continuous-batching server. After the
+    warmup pass the telemetry window is re-based, so the stats (latency
+    percentiles, share/dedup rates) describe only the timed traffic."""
     def one(stmt):
         return server.predict(stmt, timeout=60.0)
 
     with ThreadPoolExecutor(concurrency) as pool:
-        list(pool.map(one, stmts[:concurrency]))             # warm
-        best = float("inf")
+        # warm_all runs every statement once so a share-aware server
+        # enters the timed window with the full working set cached
+        list(pool.map(one, stmts if warm_all else stmts[:concurrency]))
+        warm_stats = server.stats()      # cold-phase counters (dedup)
+        # each repeat gets its own telemetry window: percentiles never
+        # mix warmup samples, counters come from the best-wall repeat
+        # (matching the best-of timing convention) and the reported tail
+        # latency is the *median* of the per-repeat p95s — one straggler
+        # repeat on a loaded box must not define the latency contract
+        best, best_stats, p95s = float("inf"), None, []
         for _ in range(REPEATS):
+            server.reset_telemetry()
             t0 = time.perf_counter()
             outs = list(pool.map(one, stmts))
-            best = min(best, time.perf_counter() - t0)
-    return best, outs
+            wall = time.perf_counter() - t0
+            rep = server.stats()
+            p95s.append(rep.p95_latency_s)
+            if wall < best:
+                best, best_stats = wall, rep
+        best_stats.p95_latency_s = float(np.median(p95s))
+    return best, outs, warm_stats, best_stats
 
 
 def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
@@ -118,13 +146,11 @@ def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
     sess_srv = _make_session(zoo, table, sample)
     server = MorphingServer(session=sess_srv, max_wait_s=0.002)
     with server:
-        t_server, outs = bench_server(server, stmts, concurrency)
-    st = server.stats()
+        t_server, outs, _, st = bench_server(server, stmts, concurrency)
 
     # parity: a served request matches the engine answer
     ref = sess_base.sql(stmts[0]).rows["_score"]
-    got = next(o.scores for o in outs
-               if o.rows == len(ref))
+    got = outs[0].scores                 # pool.map preserves order
     np.testing.assert_allclose(np.sort(got), np.sort(ref), atol=1e-5)
 
     speedup = t_per_req / t_server
@@ -133,8 +159,61 @@ def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
     emit_value("serving.server_rows_per_s", rows_total / t_server,
                f"coalesced x{st.mean_coalesced:.1f}")
     emit_value("serving.speedup_server_vs_per_request", speedup, "x warm")
-    emit_value("serving.p50_latency_ms", st.p50_latency_s * 1e3, "")
-    emit_value("serving.p95_latency_ms", st.p95_latency_s * 1e3, "")
+    emit_value("serving.p50_latency_ms", st.p50_latency_s * 1e3,
+               "post-warmup window")
+    emit_value("serving.p95_latency_ms", st.p95_latency_s * 1e3,
+               "post-warmup window")
+    emit_value("serving.share_hit_rate", st.share_hit_rate, "warm rows")
+
+    # -- overlap ablation: share-aware trunk lanes vs per-task lanes -----
+    # concurrent requests select overlapping row windows; the share-aware
+    # server embeds each distinct row once (cache + in-flight dedup) and
+    # warm traffic pays head-only cost, while per-task full-predict lanes
+    # recompute every window end to end
+    zoo_o, table_o, sample_o = _setup(n_rows, width=OVERLAP_TRUNK_WIDTH,
+                                      name="serve-share")
+    sess_task = _make_session(zoo_o, table_o, sample_o)
+    srv_task = MorphingServer(session=sess_task, max_wait_s=0.002,
+                              share_lanes=False)
+    with srv_task:
+        t_task, _, _, _ = bench_server(srv_task, stmts, concurrency,
+                                       warm_all=True)
+    sess_share = _make_session(zoo_o, table_o, sample_o)
+    srv_share = MorphingServer(session=sess_share, max_wait_s=0.002)
+    with srv_share:
+        t_share, outs_share, cold_share, st_share = bench_server(
+            srv_share, stmts, concurrency, warm_all=True)
+
+    # deterministic in-flight-dedup exercise: identical concurrent
+    # requests against a cold cache under a generous coalescing window
+    # (the 2ms production window makes batch composition — and thus the
+    # dedup counter — scheduler-timing dependent; asserting on it would
+    # flake on loaded runners)
+    sess_probe = _make_session(zoo_o, table_o, sample_o)
+    srv_probe = MorphingServer(session=sess_probe, max_wait_s=0.2)
+    with srv_probe:
+        with ThreadPoolExecutor(concurrency) as pool:
+            list(pool.map(lambda s: srv_probe.predict(s, timeout=60.0),
+                          [stmts[0]] * concurrency))
+    dedup_probe = srv_probe.stats()
+    ref_o = sess_task.sql(stmts[0]).rows["_score"]
+    got_o = outs_share[0].scores         # pool.map preserves order
+    np.testing.assert_allclose(np.sort(got_o), np.sort(ref_o), atol=1e-5)
+    share_speedup = t_task / t_share
+    emit_value("serving.overlap_task_lane_rows_per_s",
+               rows_total / t_task, "full predict per lane")
+    emit_value("serving.overlap_share_rows_per_s",
+               rows_total / t_share,
+               f"hit_rate={st_share.share_hit_rate:.2f} "
+               f"cold_dedup={cold_share.dedup_rate:.2f}")
+    emit_value("serving.speedup_share_vs_task_lanes", share_speedup,
+               "x warm overlapping rows")
+    emit_value("serving.dedup_probe_rate", dedup_probe.dedup_rate,
+               f"{dedup_probe.dedup_rows} in-flight rows folded")
+    assert st_share.share_hit_rate > 0.0, (
+        "overlapping warm traffic must hit the share cache")
+    assert dedup_probe.dedup_rows > 0, (
+        "identical concurrent requests must exercise in-flight dedup")
 
     # -- partial load: a head-only predict loads head bytes, not trunk --
     sess_head = _make_session(zoo, table, sample)
@@ -165,8 +244,25 @@ def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
                    "p50_latency_ms": st.p50_latency_s * 1e3,
                    "p95_latency_ms": st.p95_latency_s * 1e3,
                    "batches": st.batches,
-                   "mean_coalesced": st.mean_coalesced},
+                   "mean_coalesced": st.mean_coalesced,
+                   "share_hit_rate": st.share_hit_rate},
         "speedup_server_vs_per_request": speedup,
+        "overlap": {
+            "trunk_width": OVERLAP_TRUNK_WIDTH,
+            "task_lanes": {"wall_s": t_task,
+                           "rows_per_s_warm": rows_total / t_task},
+            "share_lanes": {"wall_s": t_share,
+                            "rows_per_s_warm": rows_total / t_share,
+                            "p95_latency_ms":
+                                st_share.p95_latency_s * 1e3,
+                            "share_hit_rate": st_share.share_hit_rate,
+                            "cold_dedup_rate": cold_share.dedup_rate,
+                            "dedup_probe_rate": dedup_probe.dedup_rate,
+                            "dedup_probe_rows": dedup_probe.dedup_rows,
+                            "embed_rows": st_share.embed_rows,
+                            "head_rows": st_share.head_rows},
+            "speedup_share_vs_task_lanes": share_speedup,
+        },
         "partial_load": {"head_only_loaded_bytes": int(head_loaded),
                          "stored_bytes": int(rm2.stored_bytes),
                          "loaded_fraction": head_loaded
@@ -176,6 +272,10 @@ def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
         assert speedup >= TARGET_SPEEDUP, (
             f"server {speedup:.2f}x < {TARGET_SPEEDUP}x target over "
             f"per-request execution at concurrency {concurrency}")
+        assert share_speedup >= TARGET_SHARE_SPEEDUP, (
+            f"share-aware lanes {share_speedup:.2f}x < "
+            f"{TARGET_SHARE_SPEEDUP}x target over per-task lanes on the "
+            f"overlapping workload at concurrency {concurrency}")
     if json_path:
         Path(json_path).write_text(json.dumps(result, indent=2,
                                               sort_keys=True))

@@ -11,12 +11,19 @@ Rules (applied recursively over the baseline's JSON tree):
   benches assert their own speedup targets;
 - any metric named ``compile_count`` must not grow: more jit compiles
   for the same workload means shape bucketing regressed;
+- any metric named ``*p95_latency_ms`` is lower-is-better: the fresh
+  value must stay below ``(1 + threshold)`` of the baseline (tail
+  latency is a serving contract, not just a throughput side effect);
 - metrics present in the baseline but missing from the fresh run fail
   (a silently dropped metric is a regression of the bench itself).
 
 Baselines live in ``benchmarks/baselines/`` and are regenerated with the
 same CLI the CI smoke uses; refresh them deliberately (commit the new
-JSON) when a PR moves the expected numbers.
+JSON) when a PR moves the expected numbers. Record throughput baselines
+from a *median* run (their floor already grants -25%), but tail-latency
+baselines from the *max* over several runs: a p95 baseline defines a
+ceiling contract, and seeding it with one lucky scheduler draw turns
+ordinary machine noise into gate failures.
 
 Usage::
 
@@ -42,6 +49,9 @@ DEFAULT_THRESHOLD = 0.25
 _HIGHER_BETTER = ("rows_per_s", "rows_per_s_warm")
 # cold numbers include compile time and are too noisy to gate on
 _SKIP = ("rows_per_s_cold", "naive_rows_per_s")
+# lower-is-better tail-latency metrics (p50 is deliberately ungated: the
+# median moves with coalescing-window tuning, the tail is the contract)
+_LOWER_BETTER = ("p95_latency_ms",)
 
 
 def _walk(tree: dict, prefix: str = "") -> Iterator[Tuple[str, float]]:
@@ -84,6 +94,21 @@ def check_pair(fresh: dict, baseline: dict, threshold: float,
                     f"{label}: {path} regressed "
                     f"{fresh_val:.1f} < {floor:.1f} "
                     f"(baseline {base_val:.1f}, threshold "
+                    f"{threshold:.0%})")
+        elif key.endswith(_LOWER_BETTER):
+            if fresh_val is None:
+                failures.append(f"{label}: metric {path} missing from "
+                                "fresh run")
+                continue
+            ceil = base_val * (1.0 + threshold)
+            status = "OK" if fresh_val <= ceil else "FAIL"
+            print(f"[{status}] {label}:{path} fresh={fresh_val:.2f} "
+                  f"baseline={base_val:.2f} ceiling={ceil:.2f}")
+            if fresh_val > ceil:
+                failures.append(
+                    f"{label}: {path} regressed "
+                    f"{fresh_val:.2f} > {ceil:.2f} "
+                    f"(baseline {base_val:.2f}, threshold "
                     f"{threshold:.0%})")
         elif key == "compile_count":
             if fresh_val is None:

@@ -1,39 +1,51 @@
-"""MorphingServer: the continuous-batching serving path of the engine.
+"""MorphingServer: the share-aware continuous-batching serving path.
 
 Batch analytics (``MorphingSession.sql``) plans one big query; the online
 regime is many small concurrent ``PREDICT ... USING TASK`` requests
-arriving inside the DBMS. Paying the full parse/plan/chunked-executor
-machinery per request wastes exactly the overheads the cost model says
-batching amortizes, so the server keeps one *lane* per task:
+arriving inside the DBMS. The optimizer's biggest throughput lever — the
+embed/head split with vector sharing (paper §5.1) — lives inside the
+server too: lanes are keyed by *trunk*, not task, and split every request
+into a share-cached embed stage plus a cheap per-task head stage.
 
-- admission goes through a long-running :class:`ContinuousBatcher`
-  (start/submit/result/stop, results condition variable, drain-on-stop);
-- same-task requests are coalesced into cost-model-sized batches — the
-  lane's row budget comes from Eq. 11 (``choose_batch_size`` over the
-  task's calibrated :class:`HardwareProfile`), with the batcher counting
-  payload *rows*, not requests;
-- each coalesced batch executes through the task's staged
-  :class:`ExecutionBackend` (weights staged once at resolve, jit shapes
-  bucketed), so stage/compile costs amortize across requests exactly as
-  TransCost (Eq. 7) assumes;
+- admission goes through a long-running :class:`ContinuousBatcher` per
+  trunk lane (start/submit/result/stop, results condition variable,
+  drain-on-stop); tasks whose resolved models share a trunk fingerprint
+  (``ResolvedModel.trunk_fp``, tracked by the DecoupledStore layer-tensor
+  identity) feed one lane;
+- a lane's coalesced batch consults the :class:`VectorShareCache` first
+  through the batched row-granular API (``get_many`` — one vectorized
+  fingerprint pass over the whole chunk), so warm rows cost a gather,
+  not a forward pass;
+- identical in-flight rows are single-flight deduplicated: each lane has
+  one worker, batches serialize, and within a batch only the *unique*
+  missing rows run through the trunk (``ServerStats.dedup_rows`` counts
+  the folded duplicates); results write back via ``put_many`` before the
+  next batch collects, so N concurrent identical requests compute one
+  embedding;
+- row budgets come from Eq. 11 sized per stage (``cost.split_profile``):
+  the embed lane batches to the trunk's budget, the head stage to its
+  own (much larger) budget, executed through the backend's head-only
+  entry point (``ExecutionBackend.run_head``);
 - resolution rides the session's partial-load path: on a decoupled
-  store, a lane's model loads only the layers its requests need, and
-  ``ServerStats`` reports loaded-vs-stored bytes next to the latency
-  percentiles.
+  store, a head-mode task's trunk stays on disk while the share cache
+  keeps hitting.
 
     server = MorphingServer(session=sess).start()
     rid = server.submit("PREDICT emb USING TASK sent FROM reviews "
                         "WHERE len > 20")
     out = server.result(rid)          # ServeResult: scores + latency
-    server.stats().p95_latency_s
+    server.stats().share_hit_rate
     server.stop()                     # drains the queues, joins workers
+
+``share_lanes=False`` restores the per-task full-predict lanes (the
+ablation baseline ``benchmarks/bench_serving.py`` measures against).
 """
 from __future__ import annotations
 
 import itertools
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -41,13 +53,18 @@ from repro.core.zoo import adapt_input_width
 from repro.engine.session import MorphingSession
 from repro.engine.sql import QueryStmt, parse
 from repro.engine.plan import _make_pred
-from repro.pipeline.backend import InferSpec, default_host_backend
+from repro.pipeline.backend import (ExecutionBackend, InferSpec,
+                                    default_host_backend)
 from repro.pipeline.batcher import BatcherStats, ContinuousBatcher, Request
-from repro.pipeline.cost import choose_batch_size, choose_device
+from repro.pipeline.cost import (choose_batch_size, choose_device,
+                                 split_profile)
 
-# Eq. 11 candidates for the serving row budget: lanes coalesce many
+# Eq. 11 candidates for the serving row budgets: lanes coalesce many
 # requests, so the sweep extends past the per-operator 8-128 window.
 _LANE_BATCH_CANDIDATES = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+# the serving row cache is content-addressed per trunk, not per table:
+# identical rows from different requests/tables share one entry
+_SHARE_TABLE = "__serve__"
 
 
 @dataclass
@@ -62,37 +79,89 @@ class ServeResult:
 
 @dataclass
 class ServerStats:
-    """Aggregate serving telemetry across all task lanes."""
+    """Aggregate serving telemetry across all trunk lanes."""
     requests: int = 0
-    rows: int = 0
+    rows: int = 0                    # rows served (scored by a head)
     batches: int = 0
     requests_by_task: Dict[str, int] = field(default_factory=dict)
     mean_coalesced: float = 0.0      # requests fused per executed batch
     p50_latency_s: float = 0.0
     p95_latency_s: float = 0.0
     max_latency_s: float = 0.0
-    infer_seconds: float = 0.0
+    infer_seconds: float = 0.0       # embed + head compute seconds
     loaded_bytes: int = 0            # model bytes read from disk
     stored_bytes: int = 0            # model bytes held by the store
+    # share-aware serving: the embed/head split inside the lanes
+    share_hits: int = 0              # embed rows served from the cache
+    share_misses: int = 0            # embed rows not in cache (pre-dedup)
+    dedup_rows: int = 0              # in-flight duplicates folded away
+    embed_rows: int = 0              # rows actually run through a trunk
+    embed_batches: int = 0
+    head_rows: int = 0               # rows scored by per-task head stages
+    head_batches: int = 0
+    share_hit_rate_by_lane: Dict[str, float] = field(default_factory=dict)
 
     @property
     def rows_per_second(self) -> float:
         return self.rows / self.infer_seconds if self.infer_seconds else 0.0
 
+    @property
+    def share_hit_rate(self) -> float:
+        t = self.share_hits + self.share_misses
+        return self.share_hits / t if t else 0.0
+
+    @property
+    def dedup_rate(self) -> float:
+        """Fraction of would-be trunk rows eliminated by single-flight
+        dedup of identical in-flight rows."""
+        t = self.dedup_rows + self.embed_rows
+        return self.dedup_rows / t if t else 0.0
+
+
+@dataclass
+class _HeadStage:
+    """Per-task head stage: consumes embeddings at its own Eq. 11 row
+    budget (``spec.batch_size``) through the backend's head-only entry
+    point, which owns the slicing and the stats accumulation."""
+    task: str
+    spec: InferSpec                  # kind='head'; stats = head telemetry
+    backend: ExecutionBackend
+    batch_rows: int
+
+    def run(self, F: np.ndarray) -> np.ndarray:
+        return self.backend.run_head(self.spec, F)
+
 
 @dataclass
 class _Lane:
-    """Per-task serving lane: one batcher + one staged backend spec."""
-    task: str
+    """One serving lane: a batcher plus the embed/head stage specs.
+
+    With share lanes the key is the trunk fingerprint and ``heads`` maps
+    every task feeding the lane to its head stage; in legacy mode the
+    key is the task and ``spec`` executes the fused full predict.
+    """
+    key: str
     device: str
     batcher: ContinuousBatcher
-    spec: InferSpec
-    batch_rows: int
-    requests: int = 0
+    spec: InferSpec                  # embed spec (share) / predict (legacy)
+    batch_rows: int                  # Eq. 11 embed (or predict) row budget
+    heads: Dict[str, _HeadStage] = field(default_factory=dict)
+    in_dim: int = 0                  # trunk input width (0 = adapt per batch)
+    requests_by_task: Dict[str, int] = field(default_factory=dict)
+    # share counters are written by the single lane worker and read by
+    # stats() under the lane lock
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    share_hits: int = 0
+    share_misses: int = 0
+    dedup_rows: int = 0
+
+    @property
+    def requests(self) -> int:
+        return sum(self.requests_by_task.values())
 
 
 class MorphingServer:
-    """Concurrent PREDICT requests -> per-task continuous batching.
+    """Concurrent PREDICT requests -> share-aware continuous batching.
 
     Wraps a :class:`MorphingSession` (constructing one from ``**session_kw``
     when not given — the session auto-calibrates unless opted out, so
@@ -104,13 +173,15 @@ class MorphingServer:
     def __init__(self, session: Optional[MorphingSession] = None, *,
                  max_wait_s: float = 0.002, idle_wait_s: float = 0.05,
                  mem_cap_bytes: float = 2e9, nrows_hint: int = 2048,
-                 **session_kw):
+                 share_lanes: bool = True, **session_kw):
         self.session = session or MorphingSession(**session_kw)
         self.max_wait_s = max_wait_s
         self.idle_wait_s = idle_wait_s
         self.mem_cap_bytes = mem_cap_bytes
         self.nrows_hint = nrows_hint
+        self.share_lanes = share_lanes
         self._lanes: Dict[str, _Lane] = {}
+        self._lane_of_task: Dict[str, _Lane] = {}
         self._task_of: Dict[int, str] = {}
         self._ids = itertools.count()
         self._lock = threading.Lock()
@@ -128,8 +199,9 @@ class MorphingServer:
 
     def stop(self, drain: bool = True) -> None:
         """Stop every lane. With ``drain`` (default) queued requests are
-        served before the workers join; otherwise they are dropped and
-        their ``result()`` calls raise."""
+        served before the workers join — including their share-cache
+        write-backs; otherwise they are dropped and their ``result()``
+        calls raise."""
         with self._lock:
             if not self._running:
                 return
@@ -164,45 +236,161 @@ class MorphingServer:
             X = X[_make_pred(preds)(tab)]
         return X
 
+    # -- lane construction -------------------------------------------------
+    def _head_stage(self, task: str, rm, backend) -> _HeadStage:
+        _, head_prof = split_profile(rm.profile, rm.head_dim)
+        head_rows = choose_batch_size(
+            head_prof, "host", candidates=_LANE_BATCH_CANDIDATES,
+            mem_cap_bytes=self.mem_cap_bytes, hw=self.session.hw)
+        spec = InferSpec(kind="head", task=task, col="f", out="y",
+                         table=_SHARE_TABLE, version=rm.version, model=rm,
+                         batch_size=head_rows, share=None,
+                         stats=BatcherStats())
+        return _HeadStage(task=task, spec=spec, backend=backend,
+                          batch_rows=head_rows)
+
     def _lane_for(self, task: str) -> _Lane:
-        lane = self._lanes.get(task)
-        if lane is not None:
+        sess = self.session
+        rm = sess.models[task]
+        key = ((rm.trunk_fp or rm.version) if self.share_lanes else task)
+        lane = self._lanes.get(key)
+        if lane is not None and task in lane.requests_by_task:
             return lane
         with self._lock:
-            lane = self._lanes.get(task)
-            if lane is not None:
-                return lane
-            sess = self.session
-            rm = sess.models[task]
-            device = choose_device(rm.profile, self.nrows_hint,
-                                   sess.devices, sess.hw)
-            backend = sess.backends.get(device) or default_host_backend()
+            lane = self._lanes.get(key)
+            if lane is None:
+                lane = self._build_lane(key, rm)
+                if self._running:
+                    lane.batcher.start()
+                self._lanes[key] = lane
+            if task not in lane.requests_by_task:
+                # a second task joining an existing trunk lane only needs
+                # its own head stage; the trunk work is shared. Mutations
+                # go under the lane lock: stats()/reset_telemetry()
+                # iterate these dicts while traffic registers new tasks
+                if self.share_lanes and task not in lane.heads:
+                    backend = (sess.backends.get(lane.device)
+                               or default_host_backend())
+                    stage = self._head_stage(task, rm, backend)
+                    with lane.lock:
+                        lane.heads[task] = stage
+                with lane.lock:
+                    lane.requests_by_task.setdefault(task, 0)
+            self._lane_of_task[task] = lane
+            return lane
+
+    def _build_lane(self, key: str, rm) -> _Lane:
+        sess = self.session
+        device = choose_device(rm.profile, self.nrows_hint,
+                               sess.devices, sess.hw)
+        backend = sess.backends.get(device) or default_host_backend()
+        if not self.share_lanes:
             batch_rows = choose_batch_size(
                 rm.profile, device, candidates=_LANE_BATCH_CANDIDATES,
                 mem_cap_bytes=self.mem_cap_bytes, hw=sess.hw)
             spec = InferSpec(
-                kind="predict", task=task, col="x", out="y",
-                table="__serve__", version=rm.version, model=rm,
+                kind="predict", task=rm.task, col="x", out="y",
+                table=_SHARE_TABLE, version=rm.version, model=rm,
                 batch_size=batch_rows, share=None, stats=BatcherStats())
-
-            def step(payloads: List[np.ndarray],
-                     _b=backend, _s=spec) -> List[np.ndarray]:
-                lens = [len(p) for p in payloads]
-                out = np.asarray(
-                    _b.run_infer(_s, {"x": _stack(payloads)})["y"])
-                offs = np.cumsum([0] + lens)
-                return [out[a:b] for a, b in zip(offs[:-1], offs[1:])]
-
-            batcher = ContinuousBatcher(
-                step, batch_size=batch_rows, size_of=len,
-                max_wait_s=self.max_wait_s, idle_wait_s=self.idle_wait_s)
-            lane = _Lane(task=task, device=device, batcher=batcher,
+            lane = _Lane(key=key, device=device, batcher=None,  # type: ignore
                          spec=spec, batch_rows=batch_rows)
-            if self._running:
-                batcher.start()
-            self._lanes[task] = lane
-            return lane
+            step = self._legacy_step(lane, backend)
+        else:
+            embed_prof, _ = split_profile(rm.profile, rm.head_dim)
+            batch_rows = choose_batch_size(
+                embed_prof, device, candidates=_LANE_BATCH_CANDIDATES,
+                mem_cap_bytes=self.mem_cap_bytes, hw=sess.hw)
+            # version stays the staging identity (device backends look
+            # weights up by it); the share cache is keyed by the lane's
+            # trunk fingerprint explicitly in _embed
+            spec = InferSpec(
+                kind="embed", task=rm.task, col="x", out="f",
+                table=_SHARE_TABLE, version=rm.version, model=rm,
+                batch_size=batch_rows, share=None, stats=BatcherStats())
+            lane = _Lane(key=key, device=device, batcher=None,  # type: ignore
+                         spec=spec, batch_rows=batch_rows,
+                         in_dim=int(rm.in_dim or 0))
+            lane.heads[rm.task] = self._head_stage(rm.task, rm, backend)
+            step = self._share_step(lane, backend)
+        lane.batcher = ContinuousBatcher(
+            step, batch_size=batch_rows, size_of=lambda p: len(p[1]),
+            max_wait_s=self.max_wait_s, idle_wait_s=self.idle_wait_s)
+        return lane
 
+    # -- lane execution ----------------------------------------------------
+    def _legacy_step(self, lane: _Lane, backend: ExecutionBackend):
+        """Per-task full-predict step (the pre-share serving path)."""
+        def step(payloads: List[Tuple[str, np.ndarray]]) -> List[np.ndarray]:
+            arrs = [np.asarray(p, np.float32) for _, p in payloads]
+            lens = [len(a) for a in arrs]
+            out = np.asarray(
+                backend.run_infer(lane.spec, {"x": _stack(arrs)})["y"])
+            offs = np.cumsum([0] + lens)
+            return [out[a:b] for a, b in zip(offs[:-1], offs[1:])]
+        return step
+
+    def _share_step(self, lane: _Lane, backend: ExecutionBackend):
+        """Trunk-lane step: batched share-cache lookup -> single-flight
+        dedup -> trunk forward on unique missing rows -> write-back ->
+        per-task head stages."""
+        share = self.session.share
+        use_share = self.session.enable_share
+
+        def step(payloads: List[Tuple[str, np.ndarray]]) -> List[np.ndarray]:
+            arrs = [np.asarray(p, np.float32) for _, p in payloads]
+            lens = [len(a) for a in arrs]
+            X = _stack(arrs, width=lane.in_dim or None)
+            n = len(X)
+            E = self._embed(lane, backend, share if use_share else None, X)
+            offs = np.cumsum([0] + lens)
+            outs: List[np.ndarray] = []
+            for (task, _), a, b in zip(payloads, offs[:-1], offs[1:]):
+                outs.append(lane.heads[task].run(E[a:b]) if b > a
+                            else np.zeros(0, np.float32))
+            return outs
+        return step
+
+    def _embed(self, lane: _Lane, backend: ExecutionBackend,
+               share, X: np.ndarray) -> np.ndarray:
+        """Embeddings for one coalesced chunk: cache rows are gathered,
+        unique missing rows computed once, results written back."""
+        n = len(X)
+        if n == 0:
+            return np.zeros((0, 1), np.float32)
+        if share is None:
+            return np.asarray(
+                backend.run_infer(lane.spec, {"x": X})[lane.spec.out])
+        keys, found, miss = share.get_many(_SHARE_TABLE, lane.key, X,
+                                           version=lane.key)
+        n_miss = int(miss.sum())
+        if n_miss == 0:
+            with lane.lock:
+                lane.share_hits += n
+            return found
+        # single-flight dedup: identical in-flight rows (across the
+        # coalesced requests of this batch) compute once. The lane's
+        # single worker serializes batches, so rows computed here are in
+        # the cache before any later batch looks them up.
+        miss_idx = np.flatnonzero(miss)
+        uniq, first = np.unique(keys[miss_idx], return_index=True)
+        comp_idx = miss_idx[first]
+        computed = np.asarray(
+            backend.run_infer(lane.spec, {"x": X[comp_idx]})[lane.spec.out],
+            np.float32)
+        share.put_many(_SHARE_TABLE, lane.key, keys[comp_idx], computed,
+                       version=lane.key)
+        E = (np.asarray(found, np.float32) if found is not None
+             else np.zeros((n, computed.shape[1]), np.float32))
+        # computed[j] embeds uniq[j] (np.unique sorts): scatter back to
+        # every duplicate miss row in one searchsorted
+        E[miss_idx] = computed[np.searchsorted(uniq, keys[miss_idx])]
+        with lane.lock:
+            lane.share_hits += n - n_miss
+            lane.share_misses += n_miss
+            lane.dedup_rows += n_miss - len(comp_idx)
+        return E
+
+    # -- request admission -------------------------------------------------
     def resolve_task(self, name: str, X: np.ndarray, y: np.ndarray,
                      **kw) -> None:
         """Resolve a task ahead of traffic (partial-load aware)."""
@@ -215,8 +403,8 @@ class MorphingServer:
                ) -> int:
         """Admit one PREDICT statement; returns its request id. The rows
         the statement selects are snapshotted at admission (the window
-        the request observed) and coalesced with other requests for the
-        same task."""
+        the request observed) and coalesced with other requests whose
+        tasks resolve to the same trunk."""
         task, col, table, preds = self._parse_predict(sql)
         if not self._running:
             raise RuntimeError(
@@ -230,11 +418,12 @@ class MorphingServer:
         X = self._rows_for(table, col, preds)
         req_id = next(self._ids)
         # bookkeeping only after a successful admission (submit raises
-        # when racing a stop()); counter writes go under the lock
-        lane.batcher.submit(Request(req_id, X))
+        # when racing a stop()); counter writes go under the lane lock
+        lane.batcher.submit(Request(req_id, (task, X)))
         self._task_of[req_id] = task
-        with self._lock:
-            lane.requests += 1
+        with lane.lock:
+            lane.requests_by_task[task] = \
+                lane.requests_by_task.get(task, 0) + 1
         return req_id
 
     def result(self, req_id: int,
@@ -243,7 +432,7 @@ class MorphingServer:
         retrievable once: returning it releases the server's per-request
         state (long-running services stay memory-bounded)."""
         task = self._task_of[req_id]
-        lane = self._lanes[task]
+        lane = self._lane_of_task[task]
         try:
             scores = lane.batcher.result(req_id, timeout=timeout,
                                          evict=False)
@@ -276,11 +465,32 @@ class MorphingServer:
             lanes = list(self._lanes.values())
         for lane in lanes:
             lane_lat, lane_sizes = lane.batcher.telemetry()
-            st.requests += lane.requests
-            st.requests_by_task[lane.task] = lane.requests
-            st.rows += lane.spec.stats.rows
+            with lane.lock:
+                served_tasks = list(lane.requests_by_task.items())
+                heads = list(lane.heads.values())
+                st.share_hits += lane.share_hits
+                st.share_misses += lane.share_misses
+                st.dedup_rows += lane.dedup_rows
+                t = lane.share_hits + lane.share_misses
+                st.share_hit_rate_by_lane[lane.key] = \
+                    lane.share_hits / t if t else 0.0
+            for task, c in served_tasks:
+                st.requests += c
+                st.requests_by_task[task] = \
+                    st.requests_by_task.get(task, 0) + c
             st.batches += len(lane_sizes)
-            st.infer_seconds += lane.spec.stats.infer_seconds
+            if heads:                            # share-aware lane
+                st.embed_rows += lane.spec.stats.rows
+                st.embed_batches += lane.spec.stats.batches
+                st.infer_seconds += lane.spec.stats.infer_seconds
+                for h in heads:
+                    st.rows += h.spec.stats.rows     # every served row
+                    st.head_rows += h.spec.stats.rows  # passes one head
+                    st.head_batches += h.spec.stats.batches
+                    st.infer_seconds += h.spec.stats.infer_seconds
+            else:                                # legacy full-predict lane
+                st.rows += lane.spec.stats.rows
+                st.infer_seconds += lane.spec.stats.infer_seconds
             lat.extend(lane_lat)
             coalesced.extend(lane_sizes)
         if coalesced:
@@ -292,20 +502,55 @@ class MorphingServer:
         # bytes are scoped to tasks actually served through a lane — a
         # shared session's analytics-only resolutions don't belong in
         # serving telemetry
+        seen = set()
         for lane in lanes:
-            rm = self.session.models.get(lane.task)
-            if rm is not None:
-                st.loaded_bytes += rm.loaded_bytes
-                st.stored_bytes += rm.stored_bytes
+            with lane.lock:
+                tasks = list(lane.requests_by_task)
+            for task in tasks:
+                rm = self.session.models.get(task)
+                if rm is not None and task not in seen:
+                    seen.add(task)
+                    st.loaded_bytes += rm.loaded_bytes
+                    st.stored_bytes += rm.stored_bytes
         return st
 
+    def reset_telemetry(self) -> None:
+        """Re-base every telemetry window: latency/batch-size deques,
+        share/dedup counters, and per-stage BatcherStats. Percentiles and
+        rates from :meth:`stats` then describe only the traffic served
+        after the reset (e.g. post-warmup). Pending requests still serve
+        normally — only the counters restart."""
+        with self._lock:
+            lanes = list(self._lanes.values())
+        for lane in lanes:
+            lane.batcher.reset_telemetry()
+            with lane.lock:
+                lane.share_hits = lane.share_misses = lane.dedup_rows = 0
+                for task in lane.requests_by_task:
+                    lane.requests_by_task[task] = 0
+                heads = list(lane.heads.values())
+            # fresh sinks: backends read spec.stats per call, so swapping
+            # the object re-bases without racing in-flight accumulation
+            lane.spec.stats = BatcherStats()
+            for h in heads:
+                h.spec.stats = BatcherStats()
 
-def _stack(payloads: List[np.ndarray]) -> np.ndarray:
-    """Concatenate request payloads, width-adapting narrower ones so
-    requests over differently-shaped tables can share a batch (the
-    backend re-adapts to the model's input width anyway)."""
+
+def _stack(payloads: List[np.ndarray],
+           width: Optional[int] = None) -> np.ndarray:
+    """Concatenate request payloads, adapting rows to a common width so
+    requests over differently-shaped tables can share a batch. With
+    ``width`` (the lane trunk's input width) rows are adapted to the
+    model's own geometry, which keeps content fingerprints stable across
+    batches; otherwise the widest payload wins (the backend re-adapts to
+    the model's input width anyway)."""
     arrs = [np.asarray(p, np.float32) for p in payloads]
+    if any(a.ndim < 2 for a in arrs):        # non-tabular rows: as-is
+        return arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
+    if width is None:
+        if len(arrs) == 1:
+            return arrs[0]
+        width = max(a.shape[1] for a in arrs)
     if len(arrs) == 1:
-        return arrs[0]
-    width = max(a.shape[1] for a in arrs)
+        return adapt_input_width(arrs[0], width)
     return np.concatenate([adapt_input_width(a, width) for a in arrs])

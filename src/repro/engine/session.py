@@ -64,6 +64,10 @@ class ResolvedModel:
     load_mode: str = "full"          # full | partial | head
     loaded_bytes: int = 0            # disk bytes this resolution read
     stored_bytes: int = 0            # bytes the store holds for the model
+    in_dim: int = 0                  # input width the trunk consumes
+    head_dim: int = 0                # embedding width the head consumes
+    trunk_fp: str = ""               # trunk identity: tasks sharing it can
+    #                                # share one serving embed lane
 
 
 class _LazyZooModel:
@@ -289,7 +293,11 @@ class MorphingSession:
             profile=profile_for_model(n_params=float(stored.W.size),
                                       bytes_per_row=dim * 4),
             zoo_model=stored, store="blob", load_mode="full",
-            loaded_bytes=nbytes, stored_bytes=nbytes)
+            loaded_bytes=nbytes, stored_bytes=nbytes,
+            in_dim=dim, head_dim=self._trunk_out_dim(stored),
+            # BLOB trunks have no layer identity: the version string is
+            # the trunk fingerprint (same stored model -> shared lane)
+            trunk_fp=f"{zm.name}@1.0")
         self._stage_all(rm, stored)
         return rm
 
@@ -368,6 +376,12 @@ class MorphingSession:
                   and width_limit < int(arch2["in_dim"]))
         version = (f"{zm.name}@1.0+w{width_limit}" if sliced
                    else f"{zm.name}@1.0")
+        # trunk identity from resolved layer paths (delta models sharing
+        # a base trunk fingerprint equal); a width-sliced trunk is a
+        # distinct embedder, so the slice tags the fingerprint too
+        trunk_fp = self.dstore.trunk_fingerprint(zm.name)
+        if sliced:
+            trunk_fp = f"{trunk_fp}+w{width_limit}"
         rm = ResolvedModel(
             task=name, model_id=zm.name, version=version,
             features=None, head=None,
@@ -375,7 +389,9 @@ class MorphingSession:
                                       bytes_per_row=int(arch2["in_dim"]) * 4),
             zoo_model=None, store="decoupled", load_mode=mode,
             loaded_bytes=head_bytes,
-            stored_bytes=self.dstore.stored_bytes(zm.name))
+            stored_bytes=self.dstore.stored_bytes(zm.name),
+            in_dim=(width_limit if sliced else int(arch2["in_dim"])),
+            head_dim=out_dim, trunk_fp=trunk_fp)
         rm.head = lambda F, _w=w_head: np.asarray(F, np.float32) @ _w
 
         def load_trunk() -> ZooModel:

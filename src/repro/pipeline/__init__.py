@@ -6,7 +6,7 @@ from repro.pipeline.batcher import (BatcherStats, ContinuousBatcher, Request,
 from repro.pipeline.cost import (DEFAULT_HW, HardwareProfile, OpProfile,
                                  batch_cost, calibrate, choose_batch_size,
                                  choose_device, op_cost, place_dag,
-                                 profile_for_model)
+                                 profile_for_model, split_profile)
 from repro.pipeline.dag import Dag, Edge, Node
 from repro.pipeline.operators import (Batch, aggregate, batch_len,
                                       concat_batches, filter_op, groupby_agg,
@@ -14,7 +14,7 @@ from repro.pipeline.operators import (Batch, aggregate, batch_len,
                                       slice_batch, window_op)
 from repro.pipeline.scheduler import ExecStats, PipelineExecutor
 from repro.pipeline.share import (ShareStats, VectorShareCache, fingerprint,
-                                  simd_normalize_embed)
+                                  fingerprint_rows, simd_normalize_embed)
 
 __all__ = [
     "ExecutionBackend", "InferSpec", "JaxBackend", "NumpyBackend",
@@ -22,9 +22,11 @@ __all__ = [
     "BatcherStats", "ContinuousBatcher", "Request", "WindowBatcher",
     "run_batched", "DEFAULT_HW", "HardwareProfile", "OpProfile",
     "batch_cost", "calibrate", "choose_batch_size", "choose_device",
-    "op_cost", "place_dag", "profile_for_model", "Dag", "Edge", "Node",
+    "op_cost", "place_dag", "profile_for_model", "split_profile",
+    "Dag", "Edge", "Node",
     "Batch", "aggregate", "batch_len", "concat_batches", "filter_op",
     "groupby_agg", "groupby_aggs", "iter_chunks", "join", "scan",
     "slice_batch", "window_op", "ExecStats", "PipelineExecutor",
-    "ShareStats", "VectorShareCache", "fingerprint", "simd_normalize_embed",
+    "ShareStats", "VectorShareCache", "fingerprint", "fingerprint_rows",
+    "simd_normalize_embed",
 ]

@@ -100,6 +100,29 @@ class ExecutionBackend:
             res[spec.out] = self._predict(spec, X)
         return res
 
+    def run_head(self, spec: InferSpec, F: np.ndarray) -> np.ndarray:
+        """Head-only execution entry point: consume embeddings, produce
+        scores in ``spec.batch_size``-row slices (the head stage's own
+        Eq. 11 budget). Heads are O(rows * head_dim) host work (plan
+        lowering keeps them as host closures too), so the base
+        implementation is shared by every backend; stats land in
+        ``spec.stats`` so serving telemetry can report head rows next to
+        embed rows."""
+        F = np.asarray(F, np.float32)
+        if len(F) == 0:
+            return np.zeros(0, np.float32)
+        bs = max(1, spec.batch_size)
+        t0 = time.perf_counter()
+        outs = [np.asarray(spec.model.head(F[i:i + bs]))
+                for i in range(0, len(F), bs)]
+        dt = time.perf_counter() - t0
+        st = spec.stats
+        with self._stats_lock:
+            st.batches += len(outs)
+            st.rows += len(F)
+            st.infer_seconds += dt
+        return np.concatenate(outs) if len(outs) > 1 else outs[0]
+
     # -- to implement ------------------------------------------------------
     def _features(self, spec: InferSpec, X: np.ndarray) -> np.ndarray:
         raise NotImplementedError

@@ -347,6 +347,15 @@ class ContinuousBatcher:
             self._latency_of.pop(req_id, None)
             self._submitted.discard(req_id)
 
+    def reset_telemetry(self) -> None:
+        """Clear the windowed telemetry (latency + batch-size deques).
+        Served-request bookkeeping is untouched — this only re-bases the
+        window so e.g. percentiles computed after a warmup phase don't
+        mix pre- and post-warmup samples."""
+        with self._cv:
+            self.latencies.clear()
+            self.batch_sizes.clear()
+
     def telemetry(self) -> Tuple[List[float], List[int]]:
         """Consistent snapshot of (latencies, batch sizes) — the live
         deques mutate under the worker thread, so readers must not

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 # hardware constants (host numbers measured-order-of-magnitude; TPU per brief)
 HOST_FLOPS = 5e10          # ~50 GFLOP/s effective numpy single-core
@@ -178,6 +178,26 @@ def profile_for_model(n_params: float, bytes_per_row: float,
         flops_per_row=flops_per_row if flops_per_row else 2.0 * n_params,
         bytes_per_row=bytes_per_row,
         model_bytes=n_params * dtype_bytes)
+
+
+def split_profile(p: OpProfile, head_dim: int,
+                  dtype_bytes: int = 4) -> Tuple[OpProfile, OpProfile]:
+    """Split a full-predict profile into (embed, head) stage profiles so
+    Eq. 11 sizes the serving row budgets separately: the trunk keeps the
+    model's FLOPs and staged weight bytes; the head is an O(head_dim)
+    readout over already-computed embeddings with (next to) no weights
+    to stage, so its budget lands on much larger batches."""
+    head_dim = max(int(head_dim), 1)
+    head_flops = 2.0 * head_dim
+    head = OpProfile(flops_per_row=head_flops,
+                     bytes_per_row=float(head_dim * dtype_bytes),
+                     model_bytes=float(head_dim * dtype_bytes))
+    embed = OpProfile(
+        flops_per_row=max(p.flops_per_row - head_flops, 1.0),
+        bytes_per_row=p.bytes_per_row,
+        model_bytes=p.model_bytes,
+        api_latency_s=p.api_latency_s)
+    return embed, head
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,135 @@ def fingerprint(arr: np.ndarray) -> str:
     return h.hexdigest()[:16]
 
 
+# Word-wise murmur3-style hash (rotate-multiply rounds + avalanche
+# finalizer). Plain FNV is not enough here: float rows concentrate
+# entropy in a word's *high* bits (sign/exponent), and multiply-only
+# mixing never diffuses high bits downward, so one-hot rows collide.
+# One 64-bit fingerprint per row matches the chunk-level convention
+# (``fingerprint`` keeps 64 bits of sha1); collisions are birthday-
+# bounded at ~n^2 / 2^65 over distinct rows.
+_SEED = np.uint64(0xCBF29CE484222325)
+_C1 = np.uint64(0x87C37B91114253D5)
+_C2 = np.uint64(0x4CF5AD432745937F)
+_MIX1 = np.uint64(0xFF51AFD7ED558CCD)
+_MIX2 = np.uint64(0xC4CEB9FE1A85EC53)
+
+
+def _rotl(x: np.ndarray, r: int) -> np.ndarray:
+    return (x << np.uint64(r)) | (x >> np.uint64(64 - r))
+
+
+def fingerprint_rows(arr: np.ndarray) -> np.ndarray:
+    """Per-row content fingerprints of a whole chunk in one vectorized
+    pass: ``(n,)`` uint64. The naive form — one ``hashlib`` call per
+    row — dominates small-batch serving cost; here the hash state is an
+    n-vector and the loop runs over the *words per row* (a handful), so
+    the work is O(row_bytes) numpy ops instead of O(n) Python calls."""
+    A = np.ascontiguousarray(arr)
+    n = len(A)
+    if n == 0:
+        return np.zeros(0, np.uint64)
+    row_bytes = A.view(np.uint8).reshape(n, -1)
+    nb = row_bytes.shape[1]
+    pad = (-nb) % 8
+    if pad:                              # zero-pad rows to whole words
+        padded = np.zeros((n, nb + pad), np.uint8)
+        padded[:, :nb] = row_bytes
+        row_bytes = padded
+    # words-first layout: each loop step reads one contiguous n-vector
+    words = np.ascontiguousarray(
+        np.ascontiguousarray(row_bytes).view(np.uint64).T)
+    # row width/dtype participate so e.g. float32 and float64 views of
+    # the same bytes can never alias
+    salt = np.uint64(hash((str(A.dtype), nb)) & 0xFFFFFFFFFFFFFFFF)
+    with np.errstate(over="ignore"):
+        h = np.full(n, _SEED ^ salt, np.uint64)
+        for w in words:
+            k = _rotl(w * _C1, 31) * _C2
+            h = _rotl(h ^ k, 27) * np.uint64(5) + np.uint64(0x52DCE729)
+        # final avalanche: residual structure must not survive into the
+        # sorted-lookup key space
+        h ^= h >> np.uint64(33)
+        h *= _MIX1
+        h ^= h >> np.uint64(29)
+        h *= _MIX2
+        h ^= h >> np.uint64(32)
+    return h
+
+
+class _RowBlock:
+    """Row-granular store for one (table, column, version) key space:
+    embeddings live in one contiguous matrix keyed by a parallel
+    fingerprint vector, so a batched lookup is one ``searchsorted`` over
+    the sorted fingerprints plus one fancy-index gather — no per-row
+    Python. The sort order is rebuilt lazily after inserts (inserts are
+    the cold path; lookups are the serving hot path)."""
+
+    __slots__ = ("E", "fps", "used", "_sorted", "_order")
+
+    def __init__(self, width: int, dtype, cap: int = 256):
+        self.E = np.empty((cap, width), dtype)
+        self.fps = np.empty(cap, np.uint64)
+        self.used = 0
+        self._sorted: Optional[np.ndarray] = None
+        self._order: Optional[np.ndarray] = None
+
+    @property
+    def nbytes(self) -> int:
+        return self.used * (self.E.shape[1] * self.E.itemsize + 8)
+
+    def lookup(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(row indices into E, found mask) for fingerprints ``q``."""
+        if self.used == 0:
+            return np.zeros(len(q), np.int64), np.zeros(len(q), bool)
+        if self._sorted is None:
+            self._order = np.argsort(self.fps[:self.used])
+            self._sorted = self.fps[:self.used][self._order]
+        pos = np.searchsorted(self._sorted, q)
+        pos[pos == self.used] = 0            # clamp; mask rejects below
+        found = self._sorted[pos] == q
+        return self._order[pos], found
+
+    def put(self, fps: np.ndarray, rows: np.ndarray) -> int:
+        """Insert rows whose fingerprints aren't present; returns bytes
+        added. Duplicates (in-call or vs stored) insert once."""
+        _, present = self.lookup(fps)
+        uniq, first = np.unique(fps[~present], return_index=True)
+        sel = np.flatnonzero(~present)[first]
+        if len(sel) == 0:
+            return 0
+        need = self.used + len(sel)
+        if need > len(self.E):
+            cap = max(need, 2 * len(self.E))
+            grown = np.empty((cap, self.E.shape[1]), self.E.dtype)
+            grown[:self.used] = self.E[:self.used]
+            self.E = grown
+            gfps = np.empty(cap, np.uint64)
+            gfps[:self.used] = self.fps[:self.used]
+            self.fps = gfps
+        before = self.nbytes
+        self.E[self.used:need] = rows[sel]
+        self.fps[self.used:need] = fps[sel]
+        self.used = need
+        self._sorted = self._order = None    # re-sort lazily
+        return self.nbytes - before
+
+    def drop_oldest(self, keep_frac: float = 0.5) -> int:
+        """Evict the oldest (insertion-order) rows, keeping the newest
+        ``keep_frac``; the buffers are reallocated so freed memory is
+        actually returned. Returns bytes freed."""
+        keep = max(int(self.used * keep_frac), 1)
+        start = self.used - keep
+        if start <= 0:
+            return 0
+        before = self.nbytes
+        self.E = self.E[start:self.used].copy()
+        self.fps = self.fps[start:self.used].copy()
+        self.used = keep
+        self._sorted = self._order = None
+        return before - self.nbytes
+
+
 @dataclass
 class ShareStats:
     hits: int = 0
@@ -52,6 +181,11 @@ class VectorShareCache:
         self.capacity = capacity_bytes
         self._mem: "OrderedDict[str, np.ndarray]" = OrderedDict()
         self._used = 0
+        # row tier: (table, column, version) -> _RowBlock, LRU over
+        # whole blocks (rows inside a block age out together — the
+        # serving path shares one block per trunk lane)
+        self._rows: "OrderedDict[str, _RowBlock]" = OrderedDict()
+        self._rows_used = 0
         self._lock = threading.Lock()
         self.stats = ShareStats()
 
@@ -91,9 +225,93 @@ class VectorShareCache:
         self._mem[key] = vec
         self._mem.move_to_end(key)
         self._used += vec.nbytes
-        while self._used > self.capacity and len(self._mem) > 1:
+        # capacity bounds the *whole* cache: chunk tier + row tier
+        while (self._used + self._rows_used > self.capacity
+               and len(self._mem) > 1):
             _, old = self._mem.popitem(last=False)
             self._used -= old.nbytes
+
+    # -- batched row-granular tier (serving hot path) ----------------------
+    def get_many(self, table: str, column: str, rows: np.ndarray,
+                 version: str = "v1"
+                 ) -> Tuple[np.ndarray, Optional[np.ndarray], np.ndarray]:
+        """Batched row-granular lookup: fingerprint the whole chunk in
+        one vectorized pass and gather every cached row in one
+        ``searchsorted`` + fancy index — no per-row Python anywhere.
+
+        Returns ``(keys, found, miss)``: ``keys`` (uint64 fingerprints)
+        identify rows for :meth:`put_many`; ``found`` is an ``(n, width)``
+        array whose *hit* rows are filled — rows flagged by ``miss`` hold
+        unspecified data and must be overwritten by the caller (one plain
+        gather is ~20x cheaper than a masked scatter on the all-hit warm
+        path). ``found`` is ``None`` when this key space has no cached
+        rows yet; ``miss[i]`` is True when row i must be computed.
+        Hit/miss stats are counted per *row* — the serving analogue of
+        the chunk-level counts ``get_or_embed`` keeps.
+        """
+        keys = fingerprint_rows(np.asarray(rows))
+        n = len(keys)
+        with self._lock:
+            block = self._rows.get(self._blockkey(table, column, version))
+            if block is None or block.used == 0:
+                self.stats.misses += n
+                return keys, None, np.ones(n, bool)
+            self._rows.move_to_end(self._blockkey(table, column, version))
+            idx, hit = block.lookup(keys)
+            miss = ~hit
+            found = block.E[idx]         # miss rows: clamped idx, garbage
+            self.stats.hits += int(hit.sum())
+            self.stats.misses += int(miss.sum())
+        return keys, found, miss
+
+    def put_many(self, table: str, column: str, keys: np.ndarray,
+                 rows: np.ndarray, version: str = "v1") -> None:
+        """Write computed rows back under keys from :meth:`get_many`."""
+        rows = np.asarray(rows)
+        keys = np.asarray(keys, np.uint64)
+        if len(keys) == 0:
+            return
+        if len(keys) != len(rows):
+            raise ValueError(f"{len(keys)} keys for {len(rows)} rows")
+        bk = self._blockkey(table, column, version)
+        with self._lock:
+            block = self._rows.get(bk)
+            if block is None:
+                block = _RowBlock(rows.shape[1], rows.dtype,
+                                  cap=max(256, len(rows)))
+                self._rows[bk] = block
+            self._rows.move_to_end(bk)
+            self._rows_used += block.put(keys, rows)
+            while (self._rows_used + self._used > self.capacity
+                   and len(self._rows) > 1):
+                _, old = self._rows.popitem(last=False)
+                self._rows_used -= old.nbytes
+            # a lone block must not grow unbounded (it would also starve
+            # the chunk tier forever): shed its oldest rows until the
+            # combined usage fits
+            while self._rows_used + self._used > self.capacity:
+                freed = block.drop_oldest()
+                if freed == 0:
+                    break
+                self._rows_used -= freed
+
+    def get_row(self, table: str, column: str, row: np.ndarray,
+                version: str = "v1") -> Optional[np.ndarray]:
+        """Single-row lookup: thin wrapper over the batched API."""
+        _, found, miss = self.get_many(table, column,
+                                       np.asarray(row)[None], version)
+        return None if (found is None or miss[0]) else found[0]
+
+    def put_row(self, table: str, column: str, row: np.ndarray,
+                emb: np.ndarray, version: str = "v1") -> None:
+        """Single-row insert: thin wrapper over the batched API."""
+        row = np.asarray(row)[None]
+        self.put_many(table, column, fingerprint_rows(row),
+                      np.asarray(emb)[None], version)
+
+    @staticmethod
+    def _blockkey(table: str, column: str, version: str) -> str:
+        return f"{table}.{column}.{version}"
 
     @property
     def hit_rate(self) -> float:

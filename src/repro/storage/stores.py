@@ -8,6 +8,7 @@ reuse) — the paper's partial-load property at pod scale.
 """
 from __future__ import annotations
 
+import hashlib
 import io
 import json
 import os
@@ -246,6 +247,26 @@ class DecoupledStore:
                 self.stats.partial_loads += 1
                 return self._read_layer_file(model_id, li, rows=(start, stop))
         raise KeyError(layer_name)
+
+    def trunk_fingerprint(self, model_id: str,
+                          prefix: str = "trunk/") -> str:
+        """Identity of a model's trunk: the *resolved* file paths of its
+        trunk layers — the same key the layer-tensor cache uses, so two
+        models whose fine-tune deltas reference one base trunk (or two
+        tasks resolving to the same stored model) fingerprint equal and
+        can share a serving embed lane. Paths are bound to their layer
+        names: the same file set wired to different layers is a
+        different trunk."""
+        pairs = sorted(
+            (li.layer_name, str(self._layer_path(model_id, li)))
+            for li in self.catalog.get_layers(model_id)
+            if li.layer_name.startswith(prefix))
+        if not pairs:
+            return model_id
+        digest = hashlib.sha1(
+            "|".join(f"{n}={p}" for n, p in pairs).encode()
+        ).hexdigest()[:16]
+        return f"trunk:{digest}"
 
     def stored_bytes(self, model_id: str) -> int:
         """Actual new bytes on disk (deltas count 0 for referenced layers)."""

@@ -149,6 +149,90 @@ def test_vector_share_cache_disk_tier(tmp_path):
     assert calls["n"] == 1
 
 
+def test_fingerprint_rows_matches_content():
+    from repro.pipeline.share import fingerprint_rows
+
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((64, 16)).astype(np.float32)
+    fps = fingerprint_rows(X)
+    assert fps.shape == (64,) and fps.dtype == np.uint64
+    # deterministic, content-addressed: equal rows hash equal wherever
+    # they sit; distinct rows hash distinct
+    np.testing.assert_array_equal(fps, fingerprint_rows(X.copy()))
+    Y = X.copy()
+    Y[3] = X[40]
+    fps2 = fingerprint_rows(Y)
+    assert fps2[3] == fps[40]
+    assert len(set(fps.tolist())) == 64
+    # dtype participates: same bytes under another dtype must not alias
+    assert (fingerprint_rows(X.view(np.int32)) != fps).any()
+    assert fingerprint_rows(np.zeros((0, 4))).shape == (0,)
+    # low-entropy rows (zeros with one hot bit) must still spread
+    Z = np.zeros((32, 16), np.float32)
+    Z[np.arange(32), np.arange(32) % 16] = 1.0 + np.arange(32) // 16
+    assert len(set(fingerprint_rows(Z).tolist())) == 32
+
+
+def test_share_cache_get_many_row_granular():
+    cache = VectorShareCache()
+    rng = np.random.default_rng(1)
+    X = rng.standard_normal((20, 8)).astype(np.float32)
+    E = np.tanh(X @ np.ones((8, 4), np.float32))
+    keys, found, miss = cache.get_many("t", "c", X, version="v1")
+    assert found is None and miss.all() and len(keys) == 20
+    cache.put_many("t", "c", keys, E, version="v1")
+    # overlapping second chunk: cached rows hit, the new row misses
+    X2 = np.concatenate([X[5:], rng.standard_normal((1, 8))
+                         .astype(np.float32)])
+    k2, found2, miss2 = cache.get_many("t", "c", X2, version="v1")
+    assert miss2.sum() == 1 and miss2[-1]
+    np.testing.assert_allclose(found2[:-1], E[5:], atol=0)
+    # version partitions the key space
+    _, f3, m3 = cache.get_many("t", "c", X, version="v2")
+    assert f3 is None and m3.all()
+    assert cache.stats.hits == 15
+    # single-row wrappers ride the same tier
+    assert cache.get_row("t", "c", X[0], version="v1") is not None
+    np.testing.assert_allclose(cache.get_row("t", "c", X[0],
+                                             version="v1"), E[0])
+    assert cache.get_row("t", "c", np.full(8, 9.0, np.float32),
+                         version="v1") is None
+    cache.put_row("t", "c", np.full(8, 9.0, np.float32),
+                  np.ones(4, np.float32), version="v1")
+    np.testing.assert_allclose(
+        cache.get_row("t", "c", np.full(8, 9.0, np.float32),
+                      version="v1"), np.ones(4))
+
+
+def test_share_cache_single_row_block_stays_bounded():
+    """A lone row block must shed its oldest rows at capacity instead of
+    growing forever (and permanently starving the chunk tier)."""
+    row_bytes = 4 * 4 + 8                     # width-4 float32 + fp
+    cache = VectorShareCache(capacity_bytes=64 * row_bytes)
+    rng = np.random.default_rng(0)
+    for i in range(8):                        # 8 x 32 fresh rows, 1 block
+        X = rng.standard_normal((32, 8)).astype(np.float32)
+        keys, _, _ = cache.get_many("t", "c", X)
+        cache.put_many("t", "c", keys, np.ones((32, 4), np.float32))
+        assert cache._rows_used <= cache.capacity
+        # the newest rows survive the shedding
+        _, _, miss = cache.get_many("t", "c", X)
+        assert not miss.any()
+
+
+def test_share_cache_row_blocks_evict_lru():
+    cache = VectorShareCache(capacity_bytes=4 * 64 * 4 * 2)  # ~2 blocks
+    X = np.arange(64 * 8, dtype=np.float32).reshape(64, 8)
+    E = np.ones((64, 4), np.float32)
+    for i in range(4):                        # 4 key spaces, LRU evicts
+        keys, _, _ = cache.get_many("t", f"c{i}", X)
+        cache.put_many("t", f"c{i}", keys, E)
+    _, found, miss = cache.get_many("t", "c0", X)
+    assert found is None and miss.all()       # oldest block evicted
+    _, found3, miss3 = cache.get_many("t", "c3", X)
+    assert not miss3.any()                    # newest survives
+
+
 def test_pipeline_chunked_matches_single_shot():
     rng = np.random.default_rng(0)
     n = 500

@@ -325,6 +325,266 @@ def test_server_jax_backend_parity(tmp_path, serve_zoo, table, sample):
     np.testing.assert_allclose(out.scores, ref, atol=1e-5)
 
 
+# -- share-aware serving: trunk lanes, dedup, head stages ------------------
+
+def _count_features(backend):
+    """Instrument a backend instance: record rows per _features call."""
+    calls = []
+    orig = backend._features
+
+    def counting(spec, X, _o=orig):
+        calls.append(len(X))
+        return _o(spec, X)
+
+    backend._features = counting
+    return calls
+
+
+def test_concurrent_identical_requests_embed_once(tmp_path, serve_zoo,
+                                                  table, sample):
+    """N threads submitting identical PREDICT rows must produce exactly
+    one embed computation: in-flight duplicates fold in-batch, and
+    later batches hit the cache written back by earlier ones."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    calls = _count_features(sess.backends["host"])
+    n_rows = int((table["len"] > 100).sum())
+    n_clients = 8
+    # generous coalescing window: the dedup assertion needs at least one
+    # batch to carry two identical requests even on a loaded scheduler
+    server = MorphingServer(session=sess, max_wait_s=0.2)
+    with server:
+        rids = []
+        lock = threading.Lock()
+
+        def client():
+            rid = server.submit("PREDICT emb USING TASK sent FROM "
+                                "reviews WHERE len > 100")
+            with lock:
+                rids.append(rid)
+
+        threads = [threading.Thread(target=client)
+                   for _ in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        outs = [server.result(r, timeout=10.0) for r in rids]
+    assert all(o.rows == n_rows for o in outs)
+    assert sum(calls) == n_rows              # the one and only trunk pass
+    st = server.stats()
+    assert st.embed_rows == n_rows
+    assert st.head_rows == n_clients * n_rows
+    assert st.dedup_rows + st.share_hits == (n_clients - 1) * n_rows
+    assert st.dedup_rows > 0                 # in-flight dedup exercised
+    assert st.dedup_rate > 0.0
+
+
+def test_tasks_sharing_trunk_share_one_lane(tmp_path, serve_zoo, table,
+                                            sample):
+    """Two tasks resolving to the same stored model feed one embed lane
+    and reuse each other's cached rows (cross-task trunk sharing)."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    sess.create_task(TaskSpec("sent2", "series", ("P", "N")))
+    sess.registry._resolution["sent2"] = 0
+    sess.resolve_task("sent2", sample.X, sample.y)
+    assert (sess.models["sent"].trunk_fp
+            == sess.models["sent2"].trunk_fp != "")
+    ref = sess.sql("PREDICT emb USING TASK sent FROM reviews "
+                   "WHERE len > 50").rows["_score"]
+    server = MorphingServer(session=sess, max_wait_s=0.001)
+    with server:
+        out1 = server.predict("PREDICT emb USING TASK sent FROM reviews "
+                              "WHERE len > 50", timeout=10.0)
+        out2 = server.predict("PREDICT emb USING TASK sent2 FROM reviews "
+                              "WHERE len > 50", timeout=10.0)
+    np.testing.assert_allclose(out1.scores, ref, atol=1e-5)
+    np.testing.assert_allclose(out2.scores, ref, atol=1e-5)
+    assert len(server._lanes) == 1
+    st = server.stats()
+    assert st.requests_by_task == {"sent": 1, "sent2": 1}
+    # the second task's rows were embedded by the first task's traffic
+    assert st.share_hits >= out2.rows
+    lane_key = sess.models["sent"].trunk_fp
+    assert st.share_hit_rate_by_lane[lane_key] > 0.0
+
+
+def test_distinct_trunks_get_distinct_lanes(tmp_path, serve_zoo, table,
+                                            sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    sess.create_task(TaskSpec("ring", "series", ("P", "N")))
+    sess.registry._resolution["ring"] = 1     # the radial model
+    sess.resolve_task("ring", sample.X, sample.y)
+    server = MorphingServer(session=sess)
+    with server:
+        server.predict("PREDICT emb USING TASK sent FROM reviews",
+                       timeout=10.0)
+        server.predict("PREDICT emb USING TASK ring FROM reviews",
+                       timeout=10.0)
+    assert len(server._lanes) == 2
+
+
+def test_share_lanes_match_legacy_task_lanes(tmp_path, serve_zoo, table,
+                                             sample):
+    """The embed/head split must be invisible in the scores."""
+    outs = {}
+    for mode in (True, False):
+        sess = make_session(tmp_path / str(mode), serve_zoo, table)
+        sess.resolve_task("sent", sample.X, sample.y)
+        server = MorphingServer(session=sess, share_lanes=mode)
+        with server:
+            outs[mode] = server.predict(
+                "PREDICT emb USING TASK sent FROM reviews WHERE len > 30",
+                timeout=10.0).scores
+    np.testing.assert_allclose(outs[True], outs[False], atol=1e-5)
+
+
+def test_legacy_lanes_report_no_share_counters(tmp_path, serve_zoo,
+                                               table, sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess, share_lanes=False)
+    with server:
+        for _ in range(2):
+            server.predict("PREDICT emb USING TASK sent FROM reviews",
+                           timeout=10.0)
+    st = server.stats()
+    assert st.share_hits == st.share_misses == st.dedup_rows == 0
+    assert st.embed_rows == 0 and st.head_rows == 0
+    assert st.rows == 1200 and st.share_hit_rate == 0.0
+
+
+def test_embed_head_budgets_split(tmp_path, serve_zoo, table, sample):
+    """Eq. 11 sizes the head stage independently of the embed lane: the
+    head profile is orders cheaper per row, so its budget must be at
+    least as large."""
+    from repro.pipeline.cost import split_profile
+
+    sess = make_session(tmp_path, serve_zoo, table)
+    rm = sess.resolve_task("sent", sample.X, sample.y)
+    embed_p, head_p = split_profile(rm.profile, rm.head_dim)
+    assert head_p.flops_per_row < embed_p.flops_per_row
+    assert head_p.model_bytes < embed_p.model_bytes
+    server = MorphingServer(session=sess)
+    with server:
+        server.predict("PREDICT emb USING TASK sent FROM reviews",
+                       timeout=10.0)
+    (lane,) = server._lanes.values()
+    assert lane.heads["sent"].batch_rows >= lane.batch_rows
+
+
+def test_server_reset_telemetry_rebases_window(tmp_path, serve_zoo,
+                                               table, sample):
+    """Percentiles/counters must be computable over a consistent window:
+    after reset, stats reflect only post-reset traffic (the warmup
+    samples no longer skew p50/p95)."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess)
+    with server:
+        for _ in range(4):                   # warmup traffic
+            server.predict("PREDICT emb USING TASK sent FROM reviews",
+                           timeout=10.0)
+        assert server.stats().requests == 4
+        server.reset_telemetry()
+        st0 = server.stats()
+        assert st0.requests == 0 and st0.rows == 0
+        assert st0.p95_latency_s == 0.0 and st0.share_hits == 0
+        server.predict("PREDICT emb USING TASK sent FROM reviews",
+                       timeout=10.0)
+        st = server.stats()
+    assert st.requests == 1 and st.rows == 600
+    assert st.batches == 1
+    assert 0.0 < st.p50_latency_s <= st.p95_latency_s
+    assert st.share_hits == 600              # warm rows survive the reset
+
+
+def test_write_back_races_lane_shutdown(tmp_path, serve_zoo, table,
+                                        sample):
+    """stop(drain=True) racing concurrent submits: every admitted
+    request is served, its scores correct, and the drained batches'
+    cache write-backs land (a fresh server over the same session starts
+    warm)."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    ref = sess.sql("PREDICT emb USING TASK sent FROM reviews "
+                   "WHERE len > 50").rows["_score"]
+    server = MorphingServer(session=sess, max_wait_s=0.005).start()
+    admitted, rejected = [], []
+    lock = threading.Lock()
+
+    def client():
+        for _ in range(5):
+            try:
+                rid = server.submit("PREDICT emb USING TASK sent FROM "
+                                    "reviews WHERE len > 50")
+                with lock:
+                    admitted.append(rid)
+            except RuntimeError:             # raced the stop: rejected
+                with lock:
+                    rejected.append(1)
+
+    threads = [threading.Thread(target=client) for _ in range(4)]
+    for t in threads:
+        t.start()
+    server.stop(drain=True)                  # race the submitters
+    for t in threads:
+        t.join()
+    for rid in admitted:
+        out = server.result(rid, timeout=5.0)    # drained, never lost
+        np.testing.assert_allclose(out.scores, ref, atol=1e-5)
+    if admitted:                             # write-backs survived stop
+        server2 = MorphingServer(session=sess, max_wait_s=0.001)
+        with server2:
+            server2.predict("PREDICT emb USING TASK sent FROM reviews "
+                            "WHERE len > 50", timeout=10.0)
+        st2 = server2.stats()
+        assert st2.share_hits == len(ref) and st2.embed_rows == 0
+
+
+def test_stop_without_drain_fails_pending_cleanly(tmp_path, serve_zoo,
+                                                  table, sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess, max_wait_s=0.05,
+                            idle_wait_s=0.2).start()
+    rids = [server.submit("PREDICT emb USING TASK sent FROM reviews")
+            for _ in range(6)]
+    server.stop(drain=False)
+    outcomes = {"served": 0, "failed": 0}
+    for rid in rids:
+        try:
+            server.result(rid, timeout=1.0)
+            outcomes["served"] += 1
+        except RuntimeError:
+            outcomes["failed"] += 1
+    assert outcomes["served"] + outcomes["failed"] == 6
+
+
+def test_head_mode_task_served_warm_keeps_trunk_on_disk(tmp_path,
+                                                        serve_zoo, table,
+                                                        sample):
+    """The server-side embed split preserves the partial-load story: a
+    head-mode task whose rows are already cached never materializes its
+    trunk."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    sess.create_task(TaskSpec("sent2", "series", ("P", "N")))
+    sess.registry._resolution["sent2"] = 0
+    rm2 = sess.resolve_task("sent2", sample.X, sample.y, mode="head")
+    ref = sess.sql("PREDICT emb USING TASK sent FROM reviews").rows["_score"]
+    server = MorphingServer(session=sess)
+    with server:
+        server.predict("PREDICT emb USING TASK sent FROM reviews",
+                       timeout=10.0)         # warms the lane's row cache
+        out = server.predict("PREDICT emb USING TASK sent2 FROM reviews",
+                             timeout=10.0)
+    np.testing.assert_allclose(out.scores, ref, atol=1e-5)
+    assert not rm2.zoo_model.materialized    # share hits: trunk on disk
+
+
 # -- partial-load resolution ----------------------------------------------
 
 def test_decoupled_loaded_bytes_accounting(tmp_path):
