@@ -2,8 +2,11 @@
 continuous-batching ``MorphingServer`` on the same concurrent
 ``PREDICT ... USING TASK`` workload; the share-aware trunk-lane server
 vs per-task full-predict lanes on an *overlapping-request* workload
-(where warm rows should cost head-only work); plus the partial-load
-resolution story (loaded-vs-stored bytes on the decoupled store).
+(where warm rows should cost head-only work); the fine-tune
+*delta-fleet* workload (K fine-tunes of one base serve through a single
+shared embed lane at base + K·delta loaded bytes, vs K per-task lanes
+re-running the trunk); plus the partial-load resolution story
+(loaded-vs-stored bytes on the decoupled store).
 
 Run directly for machine-readable output::
 
@@ -46,6 +49,13 @@ TARGET_SHARE_SPEEDUP = 1.5
 # the overlap ablation runs a wider trunk so the embed stage carries the
 # cost the share cache is supposed to remove
 OVERLAP_TRUNK_WIDTH = 160
+# fine-tune fleet: K delta variants of one base, served through one
+# shared embed lane; the ablation gives each task its own full-predict
+# lane (K trunk recomputations). Loaded bytes must stay near the
+# marginal cost base + K·delta, not K·full.
+DELTA_FLEET_K = 4
+TARGET_DELTA_SPEEDUP = 1.5
+DELTA_BYTES_FACTOR = 1.5
 
 
 def _setup(n_rows: int, dim: int = 16, width: int = 24,
@@ -76,6 +86,29 @@ def _statements(n_requests: int):
     # concurrent clients would
     return [f"PREDICT emb USING TASK sent FROM reviews WHERE len > "
             f"{20 + (i % 16)}" for i in range(n_requests)]
+
+
+def _make_fleet_session(zoo, table, sample, k: int):
+    """Base session + K registered fine-tunes (head deltas of the base),
+    each bound to its own task via resolve_task(model_id=)."""
+    sess = _make_session(zoo, table, sample)   # resolves 'sent' -> base
+    rng = np.random.default_rng(7)
+    base = zoo[0]
+    width = int(base.W.shape[1])
+    for i in range(k):
+        w = np.abs(rng.standard_normal(width)).astype(np.float32)
+        w /= w.sum()
+        sess.register_finetune(f"{base.name}-ft{i}", base.name,
+                               {"head/w": w})
+        sess.create_task(TaskSpec(f"sent_ft{i}", "series", ("P", "N")))
+        sess.resolve_task(f"sent_ft{i}", sample.X, sample.y,
+                          model_id=f"{base.name}-ft{i}")
+    return sess
+
+
+def _fleet_statements(n_requests: int, k: int):
+    return [f"PREDICT emb USING TASK sent_ft{i % k} FROM reviews "
+            f"WHERE len > {20 + (i % 16)}" for i in range(n_requests)]
 
 
 def _rows_served(sess, stmts) -> int:
@@ -142,7 +175,7 @@ def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
     t_per_req = bench_per_request(sess_base, stmts, concurrency)
     rows_total = _rows_served(sess_base, stmts)
 
-    # -- server: continuous batching over per-task lanes -----------------
+    # -- server: continuous batching over shared trunk embed lanes -------
     sess_srv = _make_session(zoo, table, sample)
     server = MorphingServer(session=sess_srv, max_wait_s=0.002)
     with server:
@@ -215,6 +248,57 @@ def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
     assert dedup_probe.dedup_rows > 0, (
         "identical concurrent requests must exercise in-flight dedup")
 
+    # -- delta fleet: K fine-tunes of one base share one embed lane -----
+    # the heavy trunk runs once per distinct row window regardless of
+    # which fine-tune asked; per-task full-predict lanes (the ablation)
+    # recompute it K times and stage K trunk copies
+    zoo_d, table_d, sample_d = _setup(n_rows, width=OVERLAP_TRUNK_WIDTH,
+                                      name="serve-delta")
+    fleet_stmts = _fleet_statements(n_requests, DELTA_FLEET_K)
+    sess_dtask = _make_fleet_session(zoo_d, table_d, sample_d,
+                                     DELTA_FLEET_K)
+    srv_dtask = MorphingServer(session=sess_dtask, max_wait_s=0.002,
+                               share_lanes=False)
+    with srv_dtask:
+        t_dtask, _, _, _ = bench_server(srv_dtask, fleet_stmts,
+                                        concurrency, warm_all=True)
+    sess_fleet = _make_fleet_session(zoo_d, table_d, sample_d,
+                                     DELTA_FLEET_K)
+    srv_fleet = MorphingServer(session=sess_fleet, max_wait_s=0.002)
+    with srv_fleet:
+        t_fleet, outs_fleet, _, st_fleet = bench_server(
+            srv_fleet, fleet_stmts, concurrency, warm_all=True)
+    rows_fleet = _rows_served(sess_fleet, fleet_stmts)
+
+    # parity: a served fine-tune matches its analytics answer
+    ref_d = sess_dtask.sql(fleet_stmts[0]).rows["_score"]
+    np.testing.assert_allclose(np.sort(outs_fleet[0].scores),
+                               np.sort(ref_d), atol=1e-5)
+    # the whole fleet rides ONE embed lane (shared base trunk identity)
+    assert st_fleet.lanes == 1 and st_fleet.delta_tasks == DELTA_FLEET_K, (
+        f"expected one shared embed lane for {DELTA_FLEET_K} fine-tunes, "
+        f"got lanes={st_fleet.lanes} delta_tasks={st_fleet.delta_tasks}")
+    # loaded bytes stay at marginal cost: base once + K small deltas
+    base_rm = sess_fleet.models["sent"]
+    fleet_loaded = base_rm.loaded_bytes + st_fleet.delta_loaded_bytes
+    fleet_budget = DELTA_BYTES_FACTOR * (base_rm.stored_bytes
+                                         + st_fleet.delta_stored_bytes)
+    assert fleet_loaded < fleet_budget, (
+        f"delta fleet loaded {fleet_loaded}B >= {fleet_budget:.0f}B "
+        f"(base {base_rm.stored_bytes}B + "
+        f"{DELTA_FLEET_K}·delta {st_fleet.delta_stored_bytes}B)")
+    delta_speedup = t_dtask / t_fleet
+    emit_value("serving.delta_fleet_task_lane_rows_per_s",
+               rows_fleet / t_dtask, f"{DELTA_FLEET_K} full lanes")
+    emit_value("serving.delta_fleet_share_rows_per_s",
+               rows_fleet / t_fleet,
+               f"1 embed lane, {DELTA_FLEET_K} heads, "
+               f"hit_rate={st_fleet.share_hit_rate:.2f}")
+    emit_value("serving.speedup_delta_fleet_vs_task_lanes", delta_speedup,
+               "x warm fleet rows")
+    emit_value("serving.delta_fleet_loaded_bytes", fleet_loaded,
+               f"budget {fleet_budget:.0f}")
+
     # -- partial load: a head-only predict loads head bytes, not trunk --
     sess_head = _make_session(zoo, table, sample)
     sess_head.sql(stmts[0])               # warms the share cache
@@ -263,6 +347,24 @@ def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
                             "head_rows": st_share.head_rows},
             "speedup_share_vs_task_lanes": share_speedup,
         },
+        "delta_fleet": {
+            "k": DELTA_FLEET_K,
+            "trunk_width": OVERLAP_TRUNK_WIDTH,
+            "task_lanes": {"wall_s": t_dtask,
+                           "rows_per_s_warm": rows_fleet / t_dtask},
+            "share_lanes": {"wall_s": t_fleet,
+                            "rows_per_s_warm": rows_fleet / t_fleet,
+                            "p95_latency_ms":
+                                st_fleet.p95_latency_s * 1e3,
+                            "share_hit_rate": st_fleet.share_hit_rate,
+                            "lanes": st_fleet.lanes,
+                            "delta_tasks": st_fleet.delta_tasks},
+            "speedup_share_vs_task_lanes": delta_speedup,
+            "base_stored_bytes": int(base_rm.stored_bytes),
+            "delta_stored_bytes": int(st_fleet.delta_stored_bytes),
+            "loaded_bytes": int(fleet_loaded),
+            "loaded_budget_bytes": int(fleet_budget),
+        },
         "partial_load": {"head_only_loaded_bytes": int(head_loaded),
                          "stored_bytes": int(rm2.stored_bytes),
                          "loaded_fraction": head_loaded
@@ -276,6 +378,10 @@ def run(n_rows: int = N_ROWS, n_requests: int = N_REQUESTS,
             f"share-aware lanes {share_speedup:.2f}x < "
             f"{TARGET_SHARE_SPEEDUP}x target over per-task lanes on the "
             f"overlapping workload at concurrency {concurrency}")
+        assert delta_speedup >= TARGET_DELTA_SPEEDUP, (
+            f"delta fleet through the shared embed lane "
+            f"{delta_speedup:.2f}x < {TARGET_DELTA_SPEEDUP}x target over "
+            f"{DELTA_FLEET_K} per-task lanes at concurrency {concurrency}")
     if json_path:
         Path(json_path).write_text(json.dumps(result, indent=2,
                                               sort_keys=True))

@@ -2,12 +2,22 @@
 next to the batch-analytics surface of ``examples/task_centric_sql.py``.
 
 Eight client threads fire ``PREDICT ... USING TASK`` statements at the
-server; same-task requests are coalesced into cost-model-sized batches
-and executed through the task's staged backend, while resolution rides
-the decoupled store's partial-load path (only the layers a request
-needs leave the disk). Run:
+server; requests whose tasks resolve to the same *trunk* are coalesced
+into one cost-model-sized embed lane (warm rows come from the share
+cache, in-flight duplicates compute once) and scored by cheap per-task
+head stages, while resolution rides the decoupled store's partial-load
+path (only the layers a request needs leave the disk). Run:
   PYTHONPATH=src python examples/serving_demo.py
+
+With ``--delta`` the workload becomes a fine-tune fleet: one base model
+plus three head-delta variants registered via
+``MorphingSession.register_finetune`` and bound with
+``resolve_task(model_id=)``. All four tasks share the base trunk's
+embed lane — the trunk is staged once and only the small per-head delta
+bytes are read from disk (see docs/serving.md):
+  PYTHONPATH=src python examples/serving_demo.py --delta
 """
+import argparse
 import threading
 
 import numpy as np
@@ -16,8 +26,10 @@ from repro.core import (ModelSelector, TaskFeaturizer, build_tasks,
                         build_zoo, make_task, transfer_matrix)
 from repro.engine import MorphingServer, MorphingSession
 
+N_FINETUNES = 3
 
-def main() -> None:
+
+def main(delta: bool = False) -> None:
     zoo = build_zoo(16, seed=0)
     history = build_tasks(32, seed=1)
     V = transfer_matrix(zoo, history)
@@ -41,13 +53,32 @@ def main() -> None:
     # partial-load resolution ahead of traffic: the slice is keyed to
     # the sample's width, which matches the reviews.emb schema here
     server.resolve_task("sentiment", sample.X, sample.y, mode="partial")
+    tasks = ["sentiment"]
+    if delta:
+        # fine-tune fleet: the system-resolved model becomes the base;
+        # each variant stores only a new head (delta layers) and rides
+        # the base trunk's embed lane when served
+        base_id = sess.models["sentiment"].model_id
+        base_dim = sess.models["sentiment"].head_dim
+        for i in range(N_FINETUNES):
+            w = np.abs(rng.standard_normal(base_dim)).astype(np.float32)
+            w /= w.sum()
+            ft_id = f"{base_id}-ft{i}"
+            sess.register_finetune(ft_id, base_id, {"head/w": w})
+            name = f"sentiment_ft{i}"
+            sess.sql(f"CREATE TASK {name} (INPUT=Series, "
+                     "OUTPUT IN ('POS','NEG'), TYPE='Classification');")
+            sess.resolve_task(name, sample.X, sample.y, model_id=ft_id)
+            tasks.append(name)
+
     with server:
         results = {}
 
         def client(cid: int) -> None:
             for i in range(6):
+                task = tasks[(cid + i) % len(tasks)]
                 out = server.predict(
-                    "PREDICT emb USING TASK sentiment FROM reviews "
+                    f"PREDICT emb USING TASK {task} FROM reviews "
                     f"WHERE len > {20 + 10 * (i % 4)}",
                     sample=(sample.X, sample.y), timeout=30.0)
                 results[(cid, i)] = out
@@ -70,10 +101,21 @@ def main() -> None:
           f"{st.rows_per_second:.0f} rows/s inference")
     print(f"partial load: {st.loaded_bytes}B read of "
           f"{st.stored_bytes}B stored")
+    if delta:
+        print(f"delta fleet: {len(tasks)} tasks over {st.lanes} embed "
+              f"lane(s) {st.tasks_by_lane}; {st.delta_tasks} fine-tunes "
+              f"read {st.delta_loaded_bytes}B "
+              f"({st.delta_stored_bytes}B of deltas on disk); "
+              f"share hit rate {st.share_hit_rate:.2f}")
     one = results[(0, 0)]
     print(f"(request {one.req_id}: {one.rows} rows, "
           f"mean score {one.scores.mean():+.4f})")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--delta", action="store_true",
+                    help="serve a fine-tune fleet (base + "
+                         f"{N_FINETUNES} head-delta variants) through "
+                         "one shared embed lane")
+    main(delta=ap.parse_args().delta)

@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Docs gate: keep ``docs/*.md`` + ``README.md`` honest.
+
+Two checks, both run by the CI ``docs`` job:
+
+- **links** (always): every relative markdown link must point at an
+  existing file, and every ``#anchor`` (in-page or cross-page) must
+  match a real heading in the target, using GitHub's slug rules.
+  External ``http(s)://`` links are not fetched (no network in CI gates)
+  — keep external references few and stable.
+- **quickstart** (``--quickstart``): fenced code blocks whose info
+  string contains ``quickstart`` (e.g. :literal:`\\`\\`\\`python quickstart`)
+  are executed with ``PYTHONPATH=src``, so the examples the docs open
+  with cannot rot. A failing snippet fails the job with its output.
+
+Usage::
+
+    python scripts/check_docs.py [--quickstart] [paths...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_PATHS = ("README.md", "docs")
+
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_FENCE_RE = re.compile(r"^(```+|~~~+)(.*)$")
+
+
+def _slugify(heading: str, seen: Dict[str, int]) -> str:
+    """GitHub-style heading slug: lowercase, drop punctuation, spaces to
+    hyphens, numeric suffix for duplicates."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)     # strip inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # link text only
+    slug = re.sub(r"[^\w\- ]", "", text.lower(), flags=re.UNICODE)
+    slug = slug.replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def _parse(path: Path) -> Tuple[List[Tuple[int, str]], List[str],
+                                List[Tuple[str, str]]]:
+    """(links, anchors, quickstart blocks) of one markdown file. Links
+    inside fenced code blocks are ignored; fences tagged ``quickstart``
+    are collected for execution."""
+    links: List[Tuple[int, str]] = []
+    anchors: List[str] = []
+    blocks: List[Tuple[str, str]] = []      # (info, code)
+    seen: Dict[str, int] = {}
+    fence, info, code = None, "", []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        m = _FENCE_RE.match(line.strip())
+        if m:
+            tok = m.group(1)
+            if fence is None:
+                fence, info, code = tok, m.group(2).strip(), []
+                continue
+            # a closing fence uses the same character, is at least as
+            # long as the opener, and carries no info string — anything
+            # shorter (e.g. ``` inside a ```` block) is content
+            if (tok[0] == fence[0] and len(tok) >= len(fence)
+                    and not m.group(2).strip()):
+                if "quickstart" in info.split():
+                    blocks.append((info, "\n".join(code)))
+                fence = None
+                continue
+        if fence is not None:
+            code.append(line)
+            continue
+        h = _HEADING_RE.match(line)
+        if h:
+            anchors.append(_slugify(h.group(2), seen))
+        for lm in _LINK_RE.finditer(line):
+            links.append((lineno, lm.group(1)))
+    return links, anchors, blocks
+
+
+def check_docs(paths: List[Path], run_quickstart: bool) -> List[str]:
+    files = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.glob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            return [f"{p}: documentation file missing"]
+    parsed = {f: _parse(f) for f in files}
+    anchors_of: Dict[Path, List[str]] = {
+        f.resolve(): p[1] for f, p in parsed.items()}
+    failures: List[str] = []
+    n_links = 0
+    for f, (links, _own_anchors, _blocks) in parsed.items():
+        for lineno, target in links:
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            n_links += 1
+            ref, _, frag = target.partition("#")
+            dest = (f.resolve() if not ref
+                    else (f.parent / ref).resolve())
+            if not dest.exists():
+                failures.append(f"{f}:{lineno}: broken link -> {target}")
+                continue
+            if frag:
+                anchs = anchors_of.get(dest)
+                if anchs is None and dest.suffix == ".md":
+                    anchs = _parse(dest)[1]
+                    anchors_of[dest] = anchs
+                if anchs is not None and frag not in anchs:
+                    failures.append(
+                        f"{f}:{lineno}: broken anchor -> {target} "
+                        f"(have: {', '.join(anchs)})")
+    print(f"checked {n_links} relative links across {len(files)} files")
+    if run_quickstart:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        n_blocks = 0
+        for f, (_l, _a, blocks) in parsed.items():
+            for info, code in blocks:
+                n_blocks += 1
+                proc = subprocess.run(
+                    [sys.executable, "-"], input=code, text=True,
+                    capture_output=True, env=env, cwd=REPO, timeout=300)
+                if proc.returncode != 0:
+                    failures.append(
+                        f"{f}: quickstart block ({info}) failed:\n"
+                        f"{proc.stdout}{proc.stderr}")
+                else:
+                    print(f"quickstart OK: {f} ({info})")
+        if n_blocks == 0:
+            failures.append("no quickstart blocks found: the docs job "
+                            "expects at least one executable example")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="markdown files/dirs (default: README.md docs/)")
+    ap.add_argument("--quickstart", action="store_true",
+                    help="also execute fenced blocks tagged 'quickstart'")
+    args = ap.parse_args(argv)
+    paths = [Path(p) for p in (args.paths or DEFAULT_PATHS)]
+    failures = check_docs(paths, run_quickstart=args.quickstart)
+    if failures:
+        print("\ndocs gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("docs gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

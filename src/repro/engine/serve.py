@@ -1,11 +1,25 @@
 """MorphingServer: the share-aware continuous-batching serving path.
 
+Paper cross-reference: lane row budgets are Eq. 11 batch-size selection
+applied per stage (``cost.split_profile`` sizes the trunk's embed budget
+and the head's much larger budget separately), and the one-time weight
+staging per trunk lane is exactly the amortization TransCost (Eq. 7)
+assumes — including its delta-aware form, where a fleet of fine-tunes
+sharing one base trunk stages it once. Field-by-field telemetry
+reference: ``docs/serving.md``.
+
 Batch analytics (``MorphingSession.sql``) plans one big query; the online
 regime is many small concurrent ``PREDICT ... USING TASK`` requests
 arriving inside the DBMS. The optimizer's biggest throughput lever — the
 embed/head split with vector sharing (paper §5.1) — lives inside the
 server too: lanes are keyed by *trunk*, not task, and split every request
-into a share-cached embed stage plus a cheap per-task head stage.
+into a share-cached embed stage plus a cheap per-task head stage. Because
+the lane key is ``ResolvedModel.trunk_fp`` — the *resolved layer-path*
+identity — K fine-tune deltas of one base model land in their base
+trunk's embed lane automatically: one trunk forward (staged once, under
+the trunk fingerprint) feeds K cheap delta-composed head stages
+(``ExecutionBackend.run_head``), and ``ServerStats`` reports the fleet's
+delta task count and byte accounting.
 
 - admission goes through a long-running :class:`ContinuousBatcher` per
   trunk lane (start/submit/result/stop, results condition variable,
@@ -100,6 +114,14 @@ class ServerStats:
     head_rows: int = 0               # rows scored by per-task head stages
     head_batches: int = 0
     share_hit_rate_by_lane: Dict[str, float] = field(default_factory=dict)
+    # fine-tune delta serving: tasks whose resolved model is a delta
+    # variant (ResolvedModel.base_model_id) riding a shared trunk lane
+    lanes: int = 0                   # live embed/predict lanes
+    tasks_by_lane: Dict[str, int] = field(default_factory=dict)
+    delta_tasks: int = 0             # served tasks that are fine-tunes
+    delta_loaded_bytes: int = 0      # disk bytes their resolutions read
+    #                                # (≈ K·delta when the base is warm)
+    delta_stored_bytes: int = 0      # their delta layers' bytes on disk
 
     @property
     def rows_per_second(self) -> float:
@@ -288,10 +310,14 @@ class MorphingServer:
             batch_rows = choose_batch_size(
                 rm.profile, device, candidates=_LANE_BATCH_CANDIDATES,
                 mem_cap_bytes=self.mem_cap_bytes, hw=sess.hw)
+            # staging identity is the trunk fingerprint here too (the
+            # session staged weights under it): the per-task ablation
+            # lanes must not re-stage a duplicate trunk per task
             spec = InferSpec(
                 kind="predict", task=rm.task, col="x", out="y",
-                table=_SHARE_TABLE, version=rm.version, model=rm,
-                batch_size=batch_rows, share=None, stats=BatcherStats())
+                table=_SHARE_TABLE, version=(rm.trunk_fp or rm.version),
+                model=rm, batch_size=batch_rows, share=None,
+                stats=BatcherStats())
             lane = _Lane(key=key, device=device, batcher=None,  # type: ignore
                          spec=spec, batch_rows=batch_rows)
             step = self._legacy_step(lane, backend)
@@ -300,13 +326,16 @@ class MorphingServer:
             batch_rows = choose_batch_size(
                 embed_prof, device, candidates=_LANE_BATCH_CANDIDATES,
                 mem_cap_bytes=self.mem_cap_bytes, hw=sess.hw)
-            # version stays the staging identity (device backends look
-            # weights up by it); the share cache is keyed by the lane's
+            # the staging identity is the trunk fingerprint (matching
+            # MorphingSession._stage_all): fine-tunes riding this lane
+            # reuse the one staged base trunk instead of re-staging K
+            # identical copies; the share cache is keyed by the lane's
             # trunk fingerprint explicitly in _embed
             spec = InferSpec(
                 kind="embed", task=rm.task, col="x", out="f",
-                table=_SHARE_TABLE, version=rm.version, model=rm,
-                batch_size=batch_rows, share=None, stats=BatcherStats())
+                table=_SHARE_TABLE, version=(rm.trunk_fp or rm.version),
+                model=rm, batch_size=batch_rows, share=None,
+                stats=BatcherStats())
             lane = _Lane(key=key, device=device, batcher=None,  # type: ignore
                          spec=spec, batch_rows=batch_rows,
                          in_dim=int(rm.in_dim or 0))
@@ -463,6 +492,7 @@ class MorphingServer:
         coalesced: List[int] = []
         with self._lock:
             lanes = list(self._lanes.values())
+        st.lanes = len(lanes)
         for lane in lanes:
             lane_lat, lane_sizes = lane.batcher.telemetry()
             with lane.lock:
@@ -474,6 +504,7 @@ class MorphingServer:
                 t = lane.share_hits + lane.share_misses
                 st.share_hit_rate_by_lane[lane.key] = \
                     lane.share_hits / t if t else 0.0
+                st.tasks_by_lane[lane.key] = len(lane.requests_by_task)
             for task, c in served_tasks:
                 st.requests += c
                 st.requests_by_task[task] = \
@@ -512,6 +543,10 @@ class MorphingServer:
                     seen.add(task)
                     st.loaded_bytes += rm.loaded_bytes
                     st.stored_bytes += rm.stored_bytes
+                    if rm.is_delta:
+                        st.delta_tasks += 1
+                        st.delta_loaded_bytes += rm.loaded_bytes
+                        st.delta_stored_bytes += rm.delta_bytes
         return st
 
     def reset_telemetry(self) -> None:

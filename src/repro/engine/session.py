@@ -38,7 +38,7 @@ from repro.pipeline.backend import (ExecutionBackend, JaxBackend,
                                     NumpyBackend, make_backends)
 from repro.pipeline.batcher import BatcherStats
 from repro.pipeline.cost import (HardwareProfile, OpProfile, calibrate,
-                                 profile_for_model)
+                                 delta_staged_profile, profile_for_model)
 from repro.pipeline.operators import (Batch, aggregate, batch_len,
                                       groupby_aggs)
 from repro.pipeline.scheduler import PipelineExecutor
@@ -50,7 +50,7 @@ from repro.storage.stores import BlobStore, DecoupledStore
 @dataclass
 class ResolvedModel:
     """A task's model, loaded back through a model store (BLOB or
-    decoupled layer tables with partial loading)."""
+    decoupled layer tables with partial loading / fine-tune deltas)."""
     task: str
     model_id: str
     version: str
@@ -68,6 +68,17 @@ class ResolvedModel:
     head_dim: int = 0                # embedding width the head consumes
     trunk_fp: str = ""               # trunk identity: tasks sharing it can
     #                                # share one serving embed lane
+    base_model_id: str = ""          # fine-tune lineage ("" = not a delta)
+    base_fp: str = ""                # the base model's trunk fingerprint;
+    #                                # == trunk_fp when the trunk is fully
+    #                                # inherited (shared embed lane)
+    delta_bytes: int = 0             # disk bytes of this model's delta
+    #                                # layers (marginal cost over the base)
+
+    @property
+    def is_delta(self) -> bool:
+        """True for a fine-tune variant served by delta composition."""
+        return bool(self.base_model_id)
 
 
 class _LazyZooModel:
@@ -115,6 +126,8 @@ class QueryReport:
     batch_infer_seconds: float = 0.0
     loaded_bytes: int = 0           # model bytes read from disk (resolution)
     stored_bytes: int = 0           # model bytes the store holds
+    delta_bytes: int = 0            # fine-tune delta bytes among the
+    #                               # resolutions this query touched
 
     @property
     def share_hit_rate(self) -> float:
@@ -221,11 +234,20 @@ class MorphingSession:
 
     def resolve_task(self, name: str, X: np.ndarray, y: np.ndarray,
                      force: bool = False,
-                     mode: Optional[str] = None) -> ResolvedModel:
+                     mode: Optional[str] = None,
+                     model_id: Optional[str] = None) -> ResolvedModel:
         """Select a model for the task from sample data, persist it via
         the session's model store + catalog, and load the weights back
         from storage (the served model is the stored one, not the
         in-memory zoo object).
+
+        ``model_id`` pins the task to an explicitly named model already
+        in the decoupled catalog — e.g. a fine-tune registered with
+        :meth:`register_finetune` — bypassing the selector. Fine-tune
+        variants resolve by *delta composition*: unchanged layers come
+        from the base model's files (warm via the cross-model layer
+        cache, so a fleet of K fine-tunes loads the base trunk once),
+        and only their delta bytes hit the disk.
 
         ``mode`` controls the decoupled store's load shape (ignored for
         the BLOB store, which is all-or-nothing):
@@ -237,7 +259,8 @@ class MorphingSession:
           rest; radial trunks load centers and skip the projection.
           Explicit opt-in: the slice is keyed to the resolution sample's
           width, so the sample must match the serving schema (queries
-          over *wider* columns would be truncated to the slice);
+          over *wider* columns would be truncated to the slice). Delta
+          trunks slice base and delta rows consistently;
         - ``'head'``    — only the head eagerly; the trunk stays on disk
           until an embed actually needs it (share-cache hits never pay).
         """
@@ -249,23 +272,80 @@ class MorphingSession:
                     f"task {name!r} already resolved with load mode "
                     f"{cached.load_mode!r}; pass force=True to "
                     f"re-resolve as {mode!r}")
+            if model_id is not None and cached.model_id != model_id:
+                raise ValueError(
+                    f"task {name!r} already resolved to "
+                    f"{cached.model_id!r}; pass force=True to re-bind "
+                    f"to {model_id!r}")
             return cached
-        idx = self.registry.resolve(name, X, y, force=force)
-        zm = self.zoo[idx]
-        spec = self.registry.get(name)
-        if self.model_store == "decoupled":
-            rm = self._resolve_decoupled(name, zm, spec, X,
-                                         mode=mode or "full")
+        if model_id is not None:
+            if self.model_store != "decoupled":
+                raise ValueError(
+                    "model_id resolution requires model_store='decoupled'")
+            self.registry.get(name)          # the task must exist
+            rm = self._resolve_from_store(name, model_id, X,
+                                          mode=mode or "full")
         else:
-            rm = self._resolve_blob(name, zm, spec)
+            idx = self.registry.resolve(name, X, y, force=force)
+            zm = self.zoo[idx]
+            spec = self.registry.get(name)
+            if self.model_store == "decoupled":
+                rm = self._resolve_decoupled(name, zm, spec, X,
+                                             mode=mode or "full")
+            else:
+                rm = self._resolve_blob(name, zm, spec)
         self.models[name] = rm
         return rm
 
+    def register_finetune(self, model_id: str, base_model_id: str,
+                          updates: Dict[str, np.ndarray], *,
+                          task_types: Optional[List[str]] = None,
+                          modality: Optional[str] = None) -> Path:
+        """Store a fine-tuned variant of a decoupled base model at its
+        marginal cost: unchanged layers become references into the base
+        (zero new bytes), changed layers land as per-layer *delta* files
+        composed back at load time (``DecoupledStore.save(base_model=)``).
+
+        ``updates`` maps layer names (e.g. ``"head/w"``, ``"trunk/W"``)
+        to replacement tensors of the base layer's shape; every other
+        layer is inherited. A head-only fine-tune keeps the base trunk
+        fingerprint, so serving routes it into the base trunk's embed
+        lane. Resolve a task against the variant with
+        ``resolve_task(name, X, y, model_id=model_id)``.
+        """
+        if self.model_store != "decoupled":
+            raise ValueError(
+                "fine-tune deltas require model_store='decoupled'")
+        info = self.catalog.get_model(base_model_id)  # KeyError if unsaved
+        if info.storage != "decoupled":
+            raise ValueError(
+                f"base {base_model_id!r} is stored as {info.storage!r}, "
+                "not decoupled layer tables")
+        arch, flat = self.dstore.load(base_model_id)
+        unknown = sorted(set(updates) - set(flat))
+        if unknown:
+            raise KeyError(
+                f"updates for layers the base lacks: {unknown}")
+        for lname, arr in updates.items():
+            arr = np.asarray(arr, dtype=flat[lname].dtype)
+            if arr.shape != flat[lname].shape:
+                raise ValueError(
+                    f"layer {lname!r} shape {arr.shape} != base shape "
+                    f"{flat[lname].shape}")
+            flat[lname] = arr
+        return self.dstore.save(
+            model_id, arch, flat, base_model=base_model_id,
+            task_types=task_types or list(info.task_types),
+            modality=modality or info.modality)
+
     def _stage_all(self, rm: ResolvedModel, stored: ZooModel) -> None:
-        # one-time weight staging: each distinct backend moves the stored
-        # weights to its device now, not per chunk (TransCost, Eq. 7)
+        # one-time weight staging under the *trunk identity*: each
+        # distinct backend moves the weights to its device now, not per
+        # chunk (TransCost, Eq. 7), and fine-tunes whose trunk is fully
+        # inherited stage nothing new — the base trunk is already
+        # resident under the shared fingerprint (delta-aware Eq. 7)
         for b in {id(b): b for b in self.backends.values()}.values():
-            b.stage(rm.version, stored)
+            b.stage(rm.trunk_fp or rm.version, stored)
 
     def _resolve_blob(self, name: str, zm: ZooModel,
                       spec: TaskSpec) -> ResolvedModel:
@@ -362,41 +442,90 @@ class MorphingSession:
             self.dstore.save(zm.name, arch, params,
                              task_types=[spec.kind],
                              modality=spec.input_type)
+        return self._resolve_from_store(name, zm.name, X, mode)
+
+    def _resolve_from_store(self, name: str, model_id: str,
+                            X: np.ndarray, mode: str) -> ResolvedModel:
+        """Resolve a task directly against a model in the decoupled
+        store. For fine-tune variants (catalog ``base_model`` lineage)
+        every read composes ``base + delta``: a warm base trunk costs
+        cache bytes, not disk bytes, and the Eq. 7 staging profile
+        charges only the delta when the trunk is already resident."""
+        if mode not in ("full", "partial", "head"):
+            raise ValueError(f"unknown load mode {mode!r}")
+        try:
+            info = self.catalog.get_model(model_id)
+        except KeyError:
+            raise KeyError(
+                f"model {model_id!r} not in the catalog; resolve its "
+                "base task first or register_finetune() it") from None
+        if info.storage != "decoupled":
+            raise ValueError(
+                f"model {model_id!r} is stored as {info.storage!r}; "
+                "direct resolution needs decoupled layer tables")
         b0 = self.dstore.stats.loaded_bytes
         arch2, head_flat = self.dstore.load(
-            zm.name, layer_filter=lambda n: n.startswith("head/"))
+            model_id, layer_filter=lambda n: n.startswith("head/"))
         w_head = np.asarray(head_flat["head/w"], np.float32)
         head_bytes = self.dstore.stats.loaded_bytes - b0
+        out_dim = int(arch2["out_dim"])
+        in_dim_full = int(arch2["in_dim"])
         width_limit = (int(np.asarray(X).shape[1])
                        if mode == "partial" else None)
         # a width-sliced trunk is a distinct embedder for inputs wider
         # than the sample — tag the version so share-cache entries and
         # staged weights never cross between the slices
-        sliced = (width_limit is not None
-                  and width_limit < int(arch2["in_dim"]))
-        version = (f"{zm.name}@1.0+w{width_limit}" if sliced
-                   else f"{zm.name}@1.0")
-        # trunk identity from resolved layer paths (delta models sharing
-        # a base trunk fingerprint equal); a width-sliced trunk is a
-        # distinct embedder, so the slice tags the fingerprint too
-        trunk_fp = self.dstore.trunk_fingerprint(zm.name)
+        sliced = width_limit is not None and width_limit < in_dim_full
+        version = (f"{model_id}@1.0+w{width_limit}" if sliced
+                   else f"{model_id}@1.0")
+        # trunk identity from resolved layer paths: a fine-tune whose
+        # trunk layers are all references fingerprints equal to its base
+        # (shared embed lane), while a trunk-delta variant gets its own
+        # identity; a width slice tags the fingerprint too
+        trunk_fp = self.dstore.trunk_fingerprint(model_id)
+        base_id = info.base_model or ""
+        base_fp = (self.dstore.trunk_fingerprint(base_id) if base_id
+                   else "")
         if sliced:
             trunk_fp = f"{trunk_fp}+w{width_limit}"
+            if base_fp:
+                base_fp = f"{base_fp}+w{width_limit}"
+        delta_b = self.dstore.delta_bytes(model_id) if base_id else 0
+        prof = profile_for_model(n_params=float(info.param_count),
+                                 bytes_per_row=in_dim_full * 4)
+
+        def trunk_resident(m: ResolvedModel) -> bool:
+            # a head-mode resolution whose lazy trunk never materialized
+            # hasn't loaded or staged anything — it can't discount this
+            # variant's Eq. 7 staging cost
+            zm = m.zoo_model
+            return (m.trunk_fp == trunk_fp and zm is not None
+                    and getattr(zm, "materialized", True))
+
+        if base_id and any(trunk_resident(m)
+                           for m in self.models.values()):
+            # the shared trunk is already resident in this session:
+            # staging this variant moves only its delta layers (Eq. 7)
+            prof = delta_staged_profile(prof, delta_b)
         rm = ResolvedModel(
-            task=name, model_id=zm.name, version=version,
-            features=None, head=None,
-            profile=profile_for_model(n_params=float(zm.W.size),
-                                      bytes_per_row=int(arch2["in_dim"]) * 4),
+            task=name, model_id=model_id, version=version,
+            features=None, head=None, profile=prof,
             zoo_model=None, store="decoupled", load_mode=mode,
             loaded_bytes=head_bytes,
-            stored_bytes=self.dstore.stored_bytes(zm.name),
-            in_dim=(width_limit if sliced else int(arch2["in_dim"])),
-            head_dim=out_dim, trunk_fp=trunk_fp)
+            stored_bytes=self.dstore.stored_bytes(model_id),
+            in_dim=(width_limit if sliced else in_dim_full),
+            head_dim=out_dim, trunk_fp=trunk_fp,
+            base_model_id=base_id, base_fp=base_fp,
+            delta_bytes=delta_b)
+        # a fine-tuned (non-uniform) head is no longer the mean readout
+        # the device backends fuse — keep it on host for exactness
+        rm.head_kind = ("mean" if np.allclose(w_head, 1.0 / max(out_dim, 1))
+                        else "linear")
         rm.head = lambda F, _w=w_head: np.asarray(F, np.float32) @ _w
 
         def load_trunk() -> ZooModel:
             s0 = self.dstore.stats.loaded_bytes
-            stored = self._load_trunk(zm.name, arch2,
+            stored = self._load_trunk(model_id, arch2,
                                       width_limit=width_limit)
             rm.loaded_bytes += self.dstore.stats.loaded_bytes - s0
             return stored
@@ -454,7 +583,12 @@ class MorphingSession:
         ctx = CompileContext(
             models=self.models,
             share=self.share if self.enable_share else None,
-            share_version_of={t: m.version for t, m in self.models.items()})
+            # embeddings depend only on the trunk, so the share cache and
+            # the staged-weight lookup key on the trunk identity: fine-
+            # tunes of one base reuse the base's cached embeddings and
+            # staged trunk (BLOB models fall back to the version string)
+            share_version_of={t: (m.trunk_fp or m.version)
+                              for t, m in self.models.items()})
         dag, source_id, sink_id, agg_node = compile_plan(plan, ctx)
         h0, m0 = self.share.stats.hits, self.share.stats.misses
         distinct_backends = {id(b): b for b in self.backends.values()}
@@ -497,6 +631,7 @@ class MorphingSession:
             m = self.models[t]
             report.loaded_bytes += m.loaded_bytes
             report.stored_bytes += m.stored_bytes
+            report.delta_bytes += m.delta_bytes
         for st in ctx.batcher_stats.values():
             report.batch_batches += st.batches
             report.batch_rows += st.rows

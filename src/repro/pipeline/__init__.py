@@ -5,8 +5,9 @@ from repro.pipeline.batcher import (BatcherStats, ContinuousBatcher, Request,
                                     WindowBatcher, run_batched)
 from repro.pipeline.cost import (DEFAULT_HW, HardwareProfile, OpProfile,
                                  batch_cost, calibrate, choose_batch_size,
-                                 choose_device, op_cost, place_dag,
-                                 profile_for_model, split_profile)
+                                 choose_device, delta_staged_profile,
+                                 op_cost, place_dag, profile_for_model,
+                                 split_profile)
 from repro.pipeline.dag import Dag, Edge, Node
 from repro.pipeline.operators import (Batch, aggregate, batch_len,
                                       concat_batches, filter_op, groupby_agg,
@@ -22,7 +23,8 @@ __all__ = [
     "BatcherStats", "ContinuousBatcher", "Request", "WindowBatcher",
     "run_batched", "DEFAULT_HW", "HardwareProfile", "OpProfile",
     "batch_cost", "calibrate", "choose_batch_size", "choose_device",
-    "op_cost", "place_dag", "profile_for_model", "split_profile",
+    "delta_staged_profile", "op_cost", "place_dag", "profile_for_model",
+    "split_profile",
     "Dag", "Edge", "Node",
     "Batch", "aggregate", "batch_len", "concat_batches", "filter_op",
     "groupby_agg", "groupby_aggs", "iter_chunks", "join", "scan",

@@ -1,14 +1,28 @@
-"""Operator cost model + device placement (paper §5.2, Eq. 5-10),
+"""Operator cost model + device placement (paper §5.2, Eq. 5-11),
 re-derived for the TPU target.
 
-C_op = ExecTime_op + TransCost_op
-  ExecTime  = ModelFLOPS / FLOPS(device) * nrows
-  TransCost = ModelSize/MemBW + ModelSize/AccelBW + Latency
+Equation map (each implemented here by name):
+
+- **Eq. 5** — operator cost ``C_op = ExecTime + TransCost``
+  (:func:`op_cost`); for remote models the cost collapses to the
+  endpoint's end-to-end latency (:func:`exec_time`'s ``api`` branch).
+- **Eq. 6** — ``ExecTime = max(FLOPs/FLOPS(dev), bytes/MemBW) * nrows``
+  roofline (:func:`exec_time`).
+- **Eq. 7** — ``TransCost = ModelSize/MemBW + ModelSize/AccelBW +
+  Latency`` (:func:`trans_cost`); staged once per resolved task, never
+  per chunk, and *delta-aware*: a fine-tune sharing a resident base
+  trunk only moves its delta layers (:func:`delta_staged_profile`).
+- **Eq. 9** — host placement pays only the memory-bus load
+  (:func:`trans_cost`'s host branch).
+- **Eq. 10** — device decision rule ``argmin C_op``
+  (:func:`choose_device`, :func:`place_dag`).
+- **Eq. 11** — batch-size selection: argmax throughput s.t. memory cap
+  and latency bound (:func:`choose_batch_size`); :func:`split_profile`
+  sizes the serving embed and head stages separately.
 
 Devices: 'host' (CPU relational ops + small models), 'tpu' (v5e chip),
-'api' (remote endpoint; cost = end-to-end latency, Eq. 5 note). The
-decision rule (Eq. 10) picks argmin cost. Batch-size selection (Eq. 11)
-maximizes throughput subject to a memory cap and a latency bound.
+'api' (remote endpoint). See ``docs/architecture.md`` for where each
+decision lands in the dataflow.
 
 Hardware numbers come in two flavours: the static spec-sheet defaults
 below (``DEFAULT_HW``), and *measured* :class:`HardwareProfile` entries
@@ -198,6 +212,19 @@ def split_profile(p: OpProfile, head_dim: int,
         model_bytes=p.model_bytes,
         api_latency_s=p.api_latency_s)
     return embed, head
+
+
+def delta_staged_profile(p: OpProfile, delta_bytes: float) -> OpProfile:
+    """Eq. 7 staging for a fine-tune whose base trunk is already resident
+    (resolved by another task, so its weights are warm in the layer cache
+    and staged on device under the shared trunk identity): only the delta
+    layers still have to move, so TransCost's ModelSize term shrinks to
+    ``delta_bytes``. ExecTime is untouched — the composed model does the
+    same math as a fully-materialized one."""
+    return OpProfile(flops_per_row=p.flops_per_row,
+                     bytes_per_row=p.bytes_per_row,
+                     model_bytes=max(float(delta_bytes), 0.0),
+                     api_latency_s=p.api_latency_s)
 
 
 # ---------------------------------------------------------------------------

@@ -2,10 +2,18 @@
 
 Embeddings are computed once per (table, column, content-fingerprint,
 embedder-version) and stored as Mvec blocks; later queries referencing the
-same data reuse them instead of re-embedding. The paper pairs this with
-SIMD vectorization — our TPU analogue is the fused normalize+project
-Pallas kernel (repro.kernels.fused_embed); on host we batch-vectorize with
-numpy (SIMD via BLAS).
+same data reuse them instead of re-embedding. In cost-model terms this
+zeroes Eq. 5's ExecTime term for warm rows — the trunk forward that
+dominates ``C_op = ExecTime + TransCost`` becomes a fingerprint lookup
+and gather — which is why both the optimizer's embed split and the
+serving lanes (Eq. 11 row budgets, ``docs/serving.md``) consult this
+cache before any backend runs. The *embedder-version* key is the trunk
+identity (``ResolvedModel.trunk_fp``), so fine-tune deltas of one base
+share their base's cached embeddings. The paper pairs sharing with SIMD
+vectorization — our TPU analogue is the fused normalize+project Pallas
+kernel (repro.kernels.fused_embed); on host we batch-vectorize with
+numpy (SIMD via BLAS), including the one-pass murmur-style row
+fingerprints ``get_many``/``put_many`` ride.
 """
 from __future__ import annotations
 

@@ -5,7 +5,14 @@ A shape-aware binary tensor format: a *shape array* (dimension sizes) and a
 dtype tag so bf16/f32/int8 zoo tensors round-trip losslessly between the
 store and JAX. Supports SQL-style slicing and partial (range) loads without
 deserializing the whole tensor — the property the paper uses for
-fine-grained in-DB access, which we use for per-shard checkpoint reads.
+fine-grained in-DB access, which we use for per-shard checkpoint reads and
+width-sliced trunk resolution.
+
+The ``flags`` byte tags what the payload *means*: ``FLAG_DELTA`` marks a
+fine-tune delta tensor (``variant - base``, same shape/dtype as the base
+layer) that only makes sense composed onto its base layer. The tag makes
+delta files self-describing on disk, so a reader can never mistake a delta
+for full weights (``DecoupledStore`` validates it on every delta read).
 
 Wire layout (little-endian):
   magic  u32 = 0x4D564543 ("MVEC")
@@ -23,6 +30,9 @@ from typing import BinaryIO, Optional, Sequence, Tuple, Union
 import numpy as np
 
 MAGIC = 0x4D564543
+
+# flags byte: payload semantics beyond shape/dtype
+FLAG_DELTA = 0x01      # fine-tune delta (variant - base); compose before use
 
 _DTYPES = ["float32", "float64", "float16", "bfloat16", "int8", "int16",
            "int32", "int64", "uint8", "uint32", "bool"]
@@ -45,6 +55,11 @@ def dtype_name(arr) -> str:
 class MvecHeader:
     dtype: str
     shape: Tuple[int, ...]
+    flags: int = 0
+
+    @property
+    def is_delta(self) -> bool:
+        return bool(self.flags & FLAG_DELTA)
 
     @property
     def itemsize(self) -> int:
@@ -62,8 +77,9 @@ class MvecHeader:
         return 12 + 8 * len(self.shape)
 
 
-def encode(arr) -> bytes:
-    """JAX/numpy array -> Mvec bytes (row-major, shape+dtype preserved)."""
+def encode(arr, flags: int = 0) -> bytes:
+    """JAX/numpy array -> Mvec bytes (row-major, shape+dtype preserved).
+    ``flags`` tags payload semantics (e.g. ``FLAG_DELTA``)."""
     name = dtype_name(arr)
     if name not in _DTYPE_CODE:
         raise ValueError(f"unsupported dtype {name}")
@@ -72,18 +88,19 @@ def encode(arr) -> bytes:
         np_arr = np_arr.view(np.uint16)
     if np_arr.ndim:  # NB: ascontiguousarray promotes 0-d -> 1-d
         np_arr = np.ascontiguousarray(np_arr)
-    head = struct.pack("<IBBH I", MAGIC, _DTYPE_CODE[name], 0, 0,
+    head = struct.pack("<IBBH I", MAGIC, _DTYPE_CODE[name], flags & 0xFF, 0,
                        np_arr.ndim)
     head += struct.pack(f"<{np_arr.ndim}Q", *np_arr.shape)
     return head + np_arr.tobytes()
 
 
 def decode_header(buf: Union[bytes, memoryview]) -> MvecHeader:
-    magic, code, _flags, _r, ndim = struct.unpack_from("<IBBH I", buf, 0)
+    magic, code, flags, _r, ndim = struct.unpack_from("<IBBH I", buf, 0)
     if magic != MAGIC:
         raise ValueError("not an Mvec buffer")
     shape = struct.unpack_from(f"<{ndim}Q", buf, 12)
-    return MvecHeader(_DTYPES[code], tuple(int(s) for s in shape))
+    return MvecHeader(_DTYPES[code], tuple(int(s) for s in shape),
+                      flags=int(flags))
 
 
 def decode(buf: Union[bytes, memoryview]):
@@ -130,12 +147,13 @@ def decode_slice(buf: Union[bytes, memoryview], start: int, stop: int):
 def read_header(f: BinaryIO) -> MvecHeader:
     pos = f.tell()
     head = f.read(12)
-    magic, code, _f, _r, ndim = struct.unpack("<IBBH I", head)
+    magic, code, flags, _r, ndim = struct.unpack("<IBBH I", head)
     if magic != MAGIC:
         raise ValueError("not an Mvec file")
     shape = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
     f.seek(pos)
-    return MvecHeader(_DTYPES[code], tuple(int(s) for s in shape))
+    return MvecHeader(_DTYPES[code], tuple(int(s) for s in shape),
+                      flags=int(flags))
 
 
 def read_slice(f: BinaryIO, start: int, stop: int):

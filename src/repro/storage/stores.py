@@ -1,6 +1,20 @@
 """Model stores (paper §3.1): BLOB all-in-one, decoupled layer tables with
 fine-tune deltas and partial loading, and API-based external endpoints.
 
+This module is the storage half of the cost model's TransCost term
+(Eq. 7): ``ModelSize/MemBW + ModelSize/AccelBW`` is paid on the bytes a
+resolution actually reads, so everything here is about shrinking
+``ModelSize`` without changing the served model — partial loads read a
+subset of layers (or a row range inside one, §3.2 Mvec slicing), and
+fine-tune *deltas* store a variant as references to unchanged base
+layers plus small per-layer delta tensors composed back at read time
+(``base + delta``; the NeurStore-style delta compression argument).
+``trunk_fingerprint`` turns the resolved layer identity into the lane
+key the serving path (Eq. 11 row budgets, ``docs/serving.md``) uses to
+coalesce fine-tunes of one base into a single embed lane. The remote
+``ApiModelRegistry`` models Eq. 5's end-to-end latency term.
+See ``docs/architecture.md`` for where each store sits in the dataflow.
+
 The decoupled store is also the substrate for distributed checkpointing
 (`repro.storage.checkpoint`): each layer is an independent Mvec file, so a
 restore can read any subset (elastic resharding, partial update, variant
@@ -16,7 +30,7 @@ import pickle
 import threading
 import time
 import zlib
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -111,19 +125,32 @@ class StoreStats:
     loaded_bytes: int = 0        # bytes read from disk
     cache_hits: int = 0
     cache_hit_bytes: int = 0     # bytes served from the layer cache
+    delta_composes: int = 0      # base+delta compositions performed
+    delta_bytes: int = 0         # delta bytes (subset of loaded_bytes)
 
 
 class DecoupledStore:
     """Architecture/parameters separation with per-layer Mvec files.
 
-    Supports: partial loading (subset of layers), fine-tune *deltas*
-    (store only changed layers referencing a base model), and
-    range reads within a layer (Mvec slicing) for per-shard restore.
+    Supports: partial loading (subset of layers), fine-tune *deltas*,
+    and range reads within a layer (Mvec slicing) for per-shard restore.
+
+    ``save(base_model=...)`` stores a fine-tuned variant at its marginal
+    cost: layers identical to the base become references (zero new
+    bytes), and changed same-geometry layers become per-layer *delta*
+    tensors (``variant - base``, tagged ``mvec.FLAG_DELTA`` on disk).
+    Reads compose ``base + delta`` transparently — integer deltas
+    round-trip exactly (wraparound), float deltas within 1 ulp — and
+    row-range reads slice base and delta consistently, so width-sliced
+    partial loads work for deltas too.
 
     Every read is accounted in :class:`StoreStats`, and layer tensors are
-    cached in memory keyed by their *resolved* file path — delta layers
-    reference base-model files, so two models sharing a trunk share one
-    cached tensor (the NeurStore-style cross-model reuse).
+    cached in memory keyed by their *resolved* file path — referenced
+    layers resolve into the base model's files, so two models sharing a
+    trunk share one cached tensor (the NeurStore-style cross-model
+    reuse), and a fine-tune resolved after its base pays only delta
+    bytes of disk I/O (the warm-base accounting Eq. 7 staging relies
+    on). Composed delta layers are cached under the delta file's path.
     """
 
     def __init__(self, root: Path, catalog: Optional[Catalog] = None,
@@ -148,10 +175,21 @@ class DecoupledStore:
         that differ from the base are written (delta storage)."""
         d = self._dir(model_id)
         d.mkdir(parents=True, exist_ok=True)
-        prefix = str(d) + os.sep   # separator: 'm1' must not evict 'm10'
-        with self._cache_lock:   # rewritten layer files invalidate caches
+        # rewritten layer files invalidate caches — including composed
+        # tensors of fine-tunes whose deltas reference this model
+        # (transitively: a re-saved base stales every variant chain)
+        stale, frontier = {model_id}, [model_id]
+        while frontier:
+            cur = frontier.pop()
+            for info in self.catalog.list_models():
+                if info.base_model == cur and info.model_id not in stale:
+                    stale.add(info.model_id)
+                    frontier.append(info.model_id)
+        # separator suffix: 'm1' must not evict 'm10'
+        prefixes = tuple(str(self._dir(m)) + os.sep for m in stale)
+        with self._cache_lock:
             self._layer_cache = {k: v for k, v in self._layer_cache.items()
-                                 if not k[0].startswith(prefix)}
+                                 if not k[0].startswith(prefixes)}
         (d / "architecture.json").write_text(json.dumps(arch_meta, indent=1))
         flat = flatten_params(params)
         base_flat: Dict[str, Any] = {}
@@ -161,18 +199,38 @@ class DecoupledStore:
         layers: List[LayerInfo] = []
         for i, (key, leaf) in enumerate(sorted(flat.items())):
             arr = np.asarray(leaf)
-            delta_of = None
             if base_model and key in base_flat:
-                base_arr = self._read_layer_file(base_model, base_flat[key])
+                base_arr = np.asarray(
+                    self._read_layer_file(base_model, base_flat[key]))
                 if (base_arr.shape == arr.shape
                         and base_arr.tobytes() == arr.tobytes()):
-                    # unchanged: reference base layer, write nothing
-                    bi = base_flat[key]
+                    # unchanged: reference the base *layer* (resolved
+                    # through the catalog at read time, so chains —
+                    # references to references, or to layers the base
+                    # itself stores as deltas — stay correct), and
+                    # write nothing
                     layers.append(LayerInfo(
                         model_id=model_id, layer_name=key, layer_index=i,
                         dtype=str(arr.dtype), shape=list(arr.shape),
                         nbytes=arr.nbytes,
-                        file=f"@{base_model}/{bi.file}",
+                        file=f"@{base_model}:{key}",
+                        delta_of=base_model))
+                    continue
+                if (base_arr.shape == arr.shape
+                        and base_arr.dtype == arr.dtype
+                        and arr.dtype.kind in "fiu"):
+                    # changed, same geometry: store only the per-layer
+                    # delta; reads compose base + delta (integers exact
+                    # via wraparound, floats within 1 ulp)
+                    with np.errstate(over="ignore"):
+                        delta = arr - base_arr
+                    fname = f"layer_{i:05d}.delta.mvec"
+                    (d / fname).write_bytes(
+                        mvec.encode(delta, flags=mvec.FLAG_DELTA))
+                    layers.append(LayerInfo(
+                        model_id=model_id, layer_name=key, layer_index=i,
+                        dtype=str(arr.dtype), shape=list(arr.shape),
+                        nbytes=arr.nbytes, file=fname,
                         delta_of=base_model))
                     continue
             fname = f"layer_{i:05d}.mvec"
@@ -180,44 +238,189 @@ class DecoupledStore:
             layers.append(LayerInfo(
                 model_id=model_id, layer_name=key, layer_index=i,
                 dtype=str(arr.dtype), shape=list(arr.shape),
-                nbytes=arr.nbytes, file=fname, delta_of=delta_of))
+                nbytes=arr.nbytes, file=fname, delta_of=None))
         self.catalog.register_layers(model_id, layers)
+        # save generation: rewriting a model's files under the same id
+        # must change every identity derived from them (trunk
+        # fingerprints key share-cache entries and staged device
+        # weights, which would otherwise serve the old tensors)
+        try:
+            gen = int(self.catalog.get_model(model_id)
+                      .extra.get("save_gen", 0)) + 1
+        except KeyError:
+            gen = 1
         self.catalog.register_model(ModelInfo(
             model_id=model_id, storage="decoupled", path=str(d),
             base_model=base_model, task_types=task_types or [],
             modality=modality,
-            param_count=int(sum(np.asarray(v).size for v in flat.values()))))
+            param_count=int(sum(np.asarray(v).size
+                                for v in flat.values())),
+            extra={"save_gen": gen}))
         return d
 
-    def _layer_path(self, model_id: str, li: LayerInfo) -> Path:
-        file = li.file
-        if file.startswith("@"):  # delta reference into the base model
-            ref_model, ref_file = file[1:].split("/", 1)
-            return self._dir(ref_model) / ref_file
-        return self._dir(model_id) / file
+    def _ref_target(self, li: LayerInfo
+                    ) -> Optional[Tuple[str, LayerInfo]]:
+        """Resolve an unchanged-layer reference one hop: ``@model:layer``
+        points at the base model's *layer* (looked up in the catalog, so
+        chained fine-tunes — references to references, or to layers the
+        base itself stores as deltas — compose correctly); the legacy
+        ``@model/file`` form references a concrete plain file (pre-delta
+        stores never wrote anything else)."""
+        if not li.file.startswith("@"):
+            return None
+        ref = li.file[1:]
+        if ":" in ref:
+            ref_model, ref_layer = ref.split(":", 1)
+            target = next((b for b in self.catalog.get_layers(ref_model)
+                           if b.layer_name == ref_layer), None)
+            if target is None:
+                raise KeyError(
+                    f"layer {li.layer_name!r} of {li.model_id!r} "
+                    f"references missing layer {ref_layer!r} in "
+                    f"{ref_model!r}")
+            return ref_model, target
+        ref_model, ref_file = ref.split("/", 1)
+        return ref_model, dc_replace(li, model_id=ref_model,
+                                     file=ref_file, delta_of=None)
+
+    def _resolve_layer(self, model_id: str,
+                       li: LayerInfo) -> Tuple[str, LayerInfo]:
+        """Follow the reference chain to the (owner model, layer) that
+        actually defines a layer's content."""
+        ref = self._ref_target(li)
+        while ref is not None:
+            model_id, li = ref
+            ref = self._ref_target(li)
+        return model_id, li
+
+    def _resolve_layer_path(self, model_id: str, li: LayerInfo) -> Path:
+        """Concrete file that defines a layer's content: references
+        follow the chain to the defining model; a composed delta layer
+        resolves to its delta file (the composed tensor really is a
+        different tensor — that is what makes ``trunk_fingerprint``
+        separate trunk-delta variants while inherited trunks share)."""
+        owner, li = self._resolve_layer(model_id, li)
+        return self._dir(owner) / li.file
+
+    def _save_gen(self, model_id: str) -> int:
+        try:
+            return int(self.catalog.get_model(model_id)
+                       .extra.get("save_gen", 0))
+        except KeyError:
+            return 0
+
+    def _layer_ident(self, model_id: str, li: LayerInfo) -> str:
+        """Content identity of a layer: the defining file's path plus
+        the save generation of *every* model contributing to the
+        tensor. A composed delta depends on its base chain too — a
+        re-saved base must change the variant's identity even though
+        the delta file itself is untouched."""
+        ref = self._ref_target(li)
+        if ref is not None:
+            return self._layer_ident(*ref)
+        ident = f"{self._dir(model_id) / li.file}@g{self._save_gen(model_id)}"
+        if self._is_composed_delta(li):
+            base_li = next(
+                (b for b in self.catalog.get_layers(li.delta_of)
+                 if b.layer_name == li.layer_name), None)
+            if base_li is not None:
+                ident += "+" + self._layer_ident(li.delta_of, base_li)
+        return ident
+
+    @staticmethod
+    def _is_composed_delta(li: LayerInfo) -> bool:
+        # delta_of + "@" file = unchanged reference (read base's layer);
+        # delta_of + own file = stored delta tensor (compose base + delta)
+        return li.delta_of is not None and not li.file.startswith("@")
+
+    def _cache_get(self, key):
+        if not self.cache_layers:
+            return None
+        with self._cache_lock:
+            cached = self._layer_cache.get(key)
+        if cached is not None:
+            self.stats.cache_hits += 1
+            self.stats.cache_hit_bytes += cached.nbytes
+        return cached
+
+    def _cache_put(self, key, arr) -> None:
+        if self.cache_layers:
+            with self._cache_lock:
+                self._layer_cache[key] = arr
 
     def _read_layer_file(self, model_id: str, li: LayerInfo,
                          rows: Optional[Tuple[int, int]] = None):
-        path = self._layer_path(model_id, li)
+        ref = self._ref_target(li)
+        if ref is not None:              # unchanged layer: read the
+            return self._read_layer_file(*ref, rows=rows)  # base's
+        if self._is_composed_delta(li):
+            return self._read_delta_layer(model_id, li, rows)
+        path = self._dir(model_id) / li.file
         key = (str(path), rows)
-        if self.cache_layers:
-            with self._cache_lock:
-                cached = self._layer_cache.get(key)
-            if cached is not None:
-                self.stats.cache_hits += 1
-                self.stats.cache_hit_bytes += cached.nbytes
-                return cached
+        cached = self._cache_get(key)
+        if cached is not None:
+            return cached
         with open(path, "rb") as f:
             if rows is not None:
+                if mvec.read_header(f).is_delta:
+                    raise ValueError(
+                        f"{path} holds a FLAG_DELTA payload but is "
+                        "catalogued as plain weights")
                 arr = mvec.read_slice(f, rows[0], rows[1])
                 self.stats.loaded_bytes += arr.nbytes
             else:
                 buf = f.read()
+                if mvec.decode_header(buf).is_delta:
+                    raise ValueError(
+                        f"{path} holds a FLAG_DELTA payload but is "
+                        "catalogued as plain weights")
                 arr = mvec.decode(buf)
                 self.stats.loaded_bytes += len(buf)
-        if self.cache_layers:
-            with self._cache_lock:
-                self._layer_cache[key] = arr
+        self._cache_put(key, arr)
+        return arr
+
+    def _read_delta_layer(self, model_id: str, li: LayerInfo,
+                          rows: Optional[Tuple[int, int]] = None):
+        """Compose ``base + delta`` for a fine-tune layer stored as a
+        delta tensor. The base layer goes through :meth:`_read_layer_file`
+        (so a warm base costs cache bytes, not disk bytes — only the
+        delta's bytes count as loaded), and row-range reads slice base
+        and delta identically, keeping width-sliced partial loads valid
+        for deltas. The composed tensor is cached under the delta file's
+        path; ``save`` invalidates it when base or variant is rewritten."""
+        path = self._dir(model_id) / li.file
+        key = (str(path), rows)
+        cached = self._cache_get(key)
+        if cached is not None:
+            return cached
+        base_li = next(
+            (b for b in self.catalog.get_layers(li.delta_of)
+             if b.layer_name == li.layer_name), None)
+        if base_li is None:
+            raise KeyError(
+                f"delta layer {li.layer_name!r} of {model_id!r} references "
+                f"missing base layer in {li.delta_of!r}")
+        base_arr = np.asarray(
+            self._read_layer_file(li.delta_of, base_li, rows=rows))
+        with open(path, "rb") as f:
+            head = mvec.read_header(f)
+            if not head.is_delta:
+                raise ValueError(
+                    f"{path} is catalogued as a delta of {li.delta_of!r} "
+                    "but its Mvec header lacks FLAG_DELTA")
+            if rows is not None:
+                delta = mvec.read_slice(f, rows[0], rows[1])
+                nread = delta.nbytes
+            else:
+                buf = f.read()
+                delta = mvec.decode(buf)
+                nread = len(buf)
+        self.stats.loaded_bytes += nread
+        self.stats.delta_bytes += nread
+        self.stats.delta_composes += 1
+        with np.errstate(over="ignore"):
+            arr = base_arr + delta
+        self._cache_put(key, arr)
         return arr
 
     def load(self, model_id: str, template=None,
@@ -255,10 +458,14 @@ class DecoupledStore:
         models whose fine-tune deltas reference one base trunk (or two
         tasks resolving to the same stored model) fingerprint equal and
         can share a serving embed lane. Paths are bound to their layer
-        names: the same file set wired to different layers is a
-        different trunk."""
+        names (the same file set wired to different layers is a
+        different trunk) and to the save generation of every
+        contributing model (``_layer_ident``), so re-saving a model —
+        or the base a delta composes against — changes the fingerprint
+        instead of silently serving stale share-cache embeddings and
+        staged weights."""
         pairs = sorted(
-            (li.layer_name, str(self._layer_path(model_id, li)))
+            (li.layer_name, self._layer_ident(model_id, li))
             for li in self.catalog.get_layers(model_id)
             if li.layer_name.startswith(prefix))
         if not pairs:
@@ -269,10 +476,21 @@ class DecoupledStore:
         return f"trunk:{digest}"
 
     def stored_bytes(self, model_id: str) -> int:
-        """Actual new bytes on disk (deltas count 0 for referenced layers)."""
+        """Actual new bytes on disk (referenced base layers count 0)."""
         total = 0
         for li in self.catalog.get_layers(model_id):
             if not li.file.startswith("@"):
+                total += (self._dir(model_id) / li.file).stat().st_size
+        return total
+
+    def delta_bytes(self, model_id: str) -> int:
+        """Disk bytes of the model's fine-tune *delta* layers (0 for a
+        base model): the marginal storage cost of the variant over its
+        base — the 'K·delta' term in the fleet accounting
+        ``base + K·delta`` that ``docs/benchmarks.md`` gates."""
+        total = 0
+        for li in self.catalog.get_layers(model_id):
+            if self._is_composed_delta(li):
                 total += (self._dir(model_id) / li.file).stat().st_size
         return total
 

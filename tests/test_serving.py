@@ -731,3 +731,233 @@ def test_auto_calibrate_populates_measured_hw(tmp_path, serve_zoo):
     off = MorphingSession(zoo=serve_zoo, root=tmp_path / "off",
                           backend="numpy", auto_calibrate=False)
     assert off.hw is None
+
+
+# -- fine-tune delta resolution & serving ---------------------------------
+
+def _register_fleet(sess, sample, k, seed=11):
+    """K head-delta fine-tunes of the already-resolved base model m0,
+    each bound to task sent_ft{i}. Returns {task: head weights}."""
+    rng = np.random.default_rng(seed)
+    dim = sess.models["sent"].head_dim
+    heads = {}
+    for i in range(k):
+        w = np.abs(rng.standard_normal(dim)).astype(np.float32)
+        w /= w.sum()
+        name, mid = f"sent_ft{i}", f"m0-ft{i}"
+        sess.register_finetune(mid, "m0", {"head/w": w})
+        sess.create_task(TaskSpec(name, "series", ("P", "N")))
+        sess.resolve_task(name, sample.X, sample.y, model_id=mid)
+        heads[name] = w
+    return heads
+
+
+def test_finetune_parity_vs_materialized_full_model(tmp_path, serve_zoo,
+                                                    table, sample):
+    """save(base_model=) -> resolve(model_id=) -> serve must match an
+    eagerly-materialized full model stored without delta encoding."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    heads = _register_fleet(sess, sample, 1)
+    # eagerly-materialized twin: same weights, no base_model lineage
+    arch, flat = sess.dstore.load("m0")
+    flat = dict(flat, **{"head/w": heads["sent_ft0"]})
+    sess.dstore.save("m0-eager", arch, flat)
+    sess.create_task(TaskSpec("sent_eager", "series", ("P", "N")))
+    rme = sess.resolve_task("sent_eager", sample.X, sample.y,
+                            model_id="m0-eager")
+    assert not rme.is_delta and sess.models["sent_ft0"].is_delta
+    got = sess.sql("PREDICT emb USING TASK sent_ft0 FROM reviews "
+                   "WHERE len > 40").rows["_score"]
+    ref = sess.sql("PREDICT emb USING TASK sent_eager FROM reviews "
+                   "WHERE len > 40").rows["_score"]
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+    # and against the raw math on the in-memory zoo weights
+    X = table["emb"][table["len"] > 40]
+    np.testing.assert_allclose(
+        got, serve_zoo[0].features(X) @ heads["sent_ft0"], atol=1e-5)
+
+
+def test_finetune_loaded_bytes_only_delta_on_warm_base(tmp_path,
+                                                       serve_zoo, table,
+                                                       sample):
+    """A fine-tune resolved after its base reads only delta bytes: the
+    base trunk is warm in the cross-model layer cache."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    base = sess.resolve_task("sent", sample.X, sample.y)
+    b0 = sess.dstore.stats.loaded_bytes
+    _register_fleet(sess, sample, 1)
+    rm = sess.models["sent_ft0"]
+    read = sess.dstore.stats.loaded_bytes - b0
+    assert rm.is_delta and rm.base_model_id == "m0"
+    assert rm.base_fp == base.trunk_fp == rm.trunk_fp != ""
+    assert rm.loaded_bytes == rm.delta_bytes == read > 0
+    assert rm.loaded_bytes < base.loaded_bytes
+    assert rm.stored_bytes == rm.delta_bytes   # only deltas on disk
+    # warm-trunk staging: Eq. 7 charges only the delta bytes
+    assert rm.profile.model_bytes == float(rm.delta_bytes)
+    assert base.profile.model_bytes > rm.profile.model_bytes
+
+
+def test_delta_fleet_shares_one_embed_lane(tmp_path, serve_zoo, table,
+                                           sample):
+    """K fine-tunes + their base ride ONE embed lane; each keeps its own
+    head stage and ServerStats reports the delta counters."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    heads = _register_fleet(sess, sample, 3)
+    server = MorphingServer(session=sess, max_wait_s=0.001)
+    X = table["emb"][table["len"] > 50]
+    F = serve_zoo[0].features(X)
+    with server:
+        for task in ["sent"] + sorted(heads):
+            out = server.predict(f"PREDICT emb USING TASK {task} "
+                                 "FROM reviews WHERE len > 50",
+                                 timeout=10.0)
+            want = (F.mean(axis=1) if task == "sent"
+                    else F @ heads[task])
+            np.testing.assert_allclose(np.asarray(out.scores), want,
+                                       atol=1e-5)
+    assert len(server._lanes) == 1
+    st = server.stats()
+    assert st.lanes == 1
+    assert st.tasks_by_lane == {sess.models["sent"].trunk_fp: 4}
+    assert st.delta_tasks == 3
+    assert st.delta_stored_bytes == sum(
+        sess.models[t].delta_bytes for t in heads)
+    assert st.delta_loaded_bytes == sum(
+        sess.models[t].loaded_bytes for t in heads)
+    # after the base's first request every fine-tune row is a share hit
+    assert st.share_hits >= 3 * len(X)
+
+
+def test_trunk_delta_variant_gets_own_lane(tmp_path, serve_zoo, table,
+                                           sample):
+    """A fine-tune whose TRUNK carries deltas is a different embedder:
+    distinct fingerprint, own lane, scores from the composed trunk."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    base = sess.resolve_task("sent", sample.X, sample.y)
+    Wd = (serve_zoo[0].W + 0.01).astype(np.float32)
+    sess.register_finetune("m0-tft", "m0", {"trunk/W": Wd})
+    sess.create_task(TaskSpec("sent_t", "series", ("P", "N")))
+    rm = sess.resolve_task("sent_t", sample.X, sample.y,
+                           model_id="m0-tft")
+    assert rm.trunk_fp != base.trunk_fp
+    assert rm.base_fp == base.trunk_fp        # lineage still recorded
+    server = MorphingServer(session=sess, max_wait_s=0.001)
+    with server:
+        out = server.predict("PREDICT emb USING TASK sent_t FROM reviews "
+                             "WHERE len > 50", timeout=10.0)
+        server.predict("PREDICT emb USING TASK sent FROM reviews "
+                       "WHERE len > 50", timeout=10.0)
+    assert len(server._lanes) == 2
+    X = table["emb"][table["len"] > 50]
+    from repro.core.zoo import ZooModel
+    twin = ZooModel(name="twin", source_family="gauss", W=Wd,
+                    mode="linear")
+    np.testing.assert_allclose(np.asarray(out.scores),
+                               twin.features(X).mean(axis=1), atol=1e-4)
+
+
+def test_finetune_head_mode_keeps_trunk_on_disk(tmp_path, serve_zoo,
+                                                table, sample):
+    """head-mode fine-tune resolution: share hits from the base's
+    traffic keep the (shared) trunk lazy — never materialized."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    sess.sql("PREDICT emb USING TASK sent FROM reviews")  # warm share
+    rng = np.random.default_rng(5)
+    w = np.abs(rng.standard_normal(12)).astype(np.float32)
+    w /= w.sum()
+    sess.register_finetune("m0-hft", "m0", {"head/w": w})
+    sess.create_task(TaskSpec("sent_h", "series", ("P", "N")))
+    rm = sess.resolve_task("sent_h", sample.X, sample.y, mode="head",
+                           model_id="m0-hft")
+    res = sess.sql("PREDICT emb USING TASK sent_h FROM reviews")
+    assert not rm.zoo_model.materialized      # share hits: trunk on disk
+    assert res.report.share_hit_rate == 1.0
+    X = np.asarray(table["emb"])
+    np.testing.assert_allclose(res.rows["_score"],
+                               serve_zoo[0].features(X) @ w, atol=1e-5)
+
+
+def test_finetune_partial_mode_slices_delta_rows(tmp_path, serve_zoo):
+    """partial-mode fine-tune with a trunk delta: base and delta rows
+    are width-sliced consistently and match the full-trunk scores."""
+    rng = np.random.default_rng(0)
+    table8 = {"len": rng.integers(1, 200, 200),
+              "emb": rng.standard_normal((200, 8)).astype(np.float32)}
+    sample8 = make_task(np.random.default_rng(2), "gauss", n=96, dim=8,
+                        classes=3)
+    Wd = (serve_zoo[0].W * 1.02).astype(np.float32)
+    outs = {}
+    for mode in ("partial", "full"):
+        sess = make_session(tmp_path / mode, serve_zoo, table8)
+        sess.resolve_task("sent", sample8.X, sample8.y)
+        sess.register_finetune("m0-pft", "m0", {"trunk/W": Wd})
+        sess.create_task(TaskSpec("sent_p", "series", ("P", "N")))
+        rm = sess.resolve_task("sent_p", sample8.X, sample8.y,
+                               mode=mode, model_id="m0-pft")
+        if mode == "partial":
+            assert "+w8" in rm.version and "+w8" in rm.trunk_fp
+            assert rm.loaded_bytes < rm.stored_bytes + rm.delta_bytes
+        outs[mode] = sess.sql("PREDICT emb USING TASK sent_p "
+                              "FROM reviews WHERE len > 50")
+    np.testing.assert_allclose(outs["partial"].rows["_score"],
+                               outs["full"].rows["_score"], atol=1e-5)
+
+
+def test_warm_trunk_discount_requires_resident_trunk(tmp_path,
+                                                     serve_zoo, table,
+                                                     sample):
+    """The Eq. 7 delta-staging discount only applies when a sharing
+    model's trunk is actually loaded/staged — a lazy head-mode
+    resolution that never materialized must not understate TransCost."""
+    rng = np.random.default_rng(5)
+    w = np.abs(rng.standard_normal(12)).astype(np.float32)
+    w /= w.sum()
+    # base resolved head-mode with NO traffic: trunk never materializes
+    sess = make_session(tmp_path, serve_zoo, table)
+    base = sess.resolve_task("sent", sample.X, sample.y, mode="head")
+    assert not base.zoo_model.materialized
+    sess.register_finetune("m0-ft0", "m0", {"head/w": w})
+    sess.create_task(TaskSpec("ft", "series", ("P", "N")))
+    rm = sess.resolve_task("ft", sample.X, sample.y, model_id="m0-ft0")
+    assert rm.profile.model_bytes > rm.delta_bytes   # full staging cost
+    # with a materialized base the discount applies
+    warm = make_session(tmp_path / "warm", serve_zoo, table)
+    warm.resolve_task("sent", sample.X, sample.y)    # full: staged
+    warm.register_finetune("m0-ft0", "m0", {"head/w": w})
+    warm.create_task(TaskSpec("ft", "series", ("P", "N")))
+    rmw = warm.resolve_task("ft", sample.X, sample.y, model_id="m0-ft0")
+    assert rmw.profile.model_bytes == float(rmw.delta_bytes)
+
+
+def test_finetune_resolution_conflicts(tmp_path, serve_zoo, table,
+                                       sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    _register_fleet(sess, sample, 1)
+    # rebinding a resolved task to another model requires force
+    with pytest.raises(ValueError, match="force=True"):
+        sess.resolve_task("sent_ft0", sample.X, sample.y, model_id="m0")
+    # unknown model ids fail with a actionable message
+    with pytest.raises(KeyError, match="register_finetune"):
+        sess.resolve_task("sent", sample.X, sample.y, model_id="nope",
+                          force=True)
+    # update validation: unknown layers and shape mismatches
+    with pytest.raises(KeyError, match="head/extra"):
+        sess.register_finetune("m0-bad", "m0",
+                               {"head/extra": np.ones(3, np.float32)})
+    with pytest.raises(ValueError, match="shape"):
+        sess.register_finetune("m0-bad", "m0",
+                               {"head/w": np.ones(3, np.float32)})
+    # fine-tunes need the decoupled store
+    blob = make_session(tmp_path / "blob", serve_zoo, table,
+                       model_store="blob")
+    with pytest.raises(ValueError, match="decoupled"):
+        blob.register_finetune("x", "m0", {})
+    blob.resolve_task("sent", sample.X, sample.y)
+    with pytest.raises(ValueError, match="decoupled"):
+        blob.resolve_task("sent", sample.X, sample.y, model_id="m0",
+                          force=True)

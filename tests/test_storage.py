@@ -4,6 +4,7 @@ import pytest
 
 from repro.storage import (ApiModelRegistry, BlobStore, Catalog,
                            DecoupledStore, flatten_params, unflatten_like)
+from repro.storage import mvec
 
 
 @pytest.fixture
@@ -58,6 +59,191 @@ def test_decoupled_partial_and_delta(tmp_path, params):
     # range read within a layer
     rows = ds.load_layer_rows("ft", "embed", 4, 9)
     np.testing.assert_array_equal(rows, params["embed"][4:9])
+
+
+def test_delta_file_composition_and_flags(tmp_path, params):
+    """A changed same-geometry layer lands as a FLAG_DELTA-tagged delta
+    file, not a full rewrite, and reads compose base + delta."""
+    ds = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    ds.save("base", {"arch": "mlp"}, params)
+    ft = {"embed": params["embed"],
+          "layers": {"w1": params["layers"]["w1"] + 0.125,
+                     "b1": params["layers"]["b1"]}}
+    ds.save("ft", {"arch": "mlp"}, ft, base_model="base")
+    w1_li = next(li for li in ds.catalog.get_layers("ft")
+                 if li.layer_name == "layers/w1")
+    assert w1_li.delta_of == "base" and not w1_li.file.startswith("@")
+    assert w1_li.file.endswith(".delta.mvec")
+    head = mvec.decode_header(
+        (tmp_path / "dec" / "ft" / w1_li.file).read_bytes())
+    assert head.is_delta and head.flags & mvec.FLAG_DELTA
+    # on-disk payload is the delta, not the weights (to float rounding:
+    # (w1 + 0.125) - w1 differs from 0.125 by ~1 ulp of w1)
+    delta = mvec.decode(
+        (tmp_path / "dec" / "ft" / w1_li.file).read_bytes())
+    np.testing.assert_allclose(delta, np.full_like(delta, 0.125),
+                               atol=1e-6)
+    _, loaded = ds.load("ft", template=ft)
+    np.testing.assert_allclose(loaded["layers"]["w1"],
+                               ft["layers"]["w1"], atol=1e-6)
+    assert ds.stats.delta_composes >= 1
+    assert ds.delta_bytes("ft") > 0 and ds.delta_bytes("base") == 0
+    # non-delta full files are untagged
+    base_li = next(li for li in ds.catalog.get_layers("base")
+                   if li.layer_name == "layers/w1")
+    assert not mvec.decode_header(
+        (tmp_path / "dec" / "base" / base_li.file).read_bytes()).is_delta
+
+
+def test_delta_integer_layers_roundtrip_exactly(tmp_path):
+    """Integer deltas compose exactly via wraparound arithmetic."""
+    ds = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    rng = np.random.default_rng(0)
+    base = {"ids": rng.integers(0, 255, 32).astype(np.uint8),
+            "steps": rng.integers(-1000, 1000, 16).astype(np.int32)}
+    ds.save("base", {"arch": "emb"}, base)
+    ft = {"ids": (base["ids"] + 200).astype(np.uint8),   # wraps
+          "steps": base["steps"] - 5}
+    ds.save("ft", {"arch": "emb"}, ft, base_model="base")
+    assert any(li.file.endswith(".delta.mvec")
+               for li in ds.catalog.get_layers("ft"))
+    _, loaded = ds.load("ft")
+    np.testing.assert_array_equal(loaded["ids"], ft["ids"])
+    np.testing.assert_array_equal(loaded["steps"], ft["steps"])
+
+
+def test_delta_row_slice_composes(tmp_path, params):
+    """load_layer_rows on a delta layer slices base and delta rows
+    consistently (the width-sliced partial-load path for fine-tunes)."""
+    ds = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    ds.save("base", {"arch": "mlp"}, params)
+    bump = np.zeros_like(params["embed"])
+    bump[3:7] = 1.5
+    ft = dict(params, embed=params["embed"] + bump)
+    ds.save("ft", {"arch": "mlp"}, ft, base_model="base")
+    rows = ds.load_layer_rows("ft", "embed", 2, 9)
+    np.testing.assert_allclose(rows, ft["embed"][2:9], atol=1e-6)
+
+
+def test_delta_loaded_bytes_count_only_delta_for_warm_base(tmp_path,
+                                                           params):
+    """With the base layer warm in the cross-model cache, loading a
+    fine-tune reads only its delta bytes from disk."""
+    ds = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    ds.save("base", {"arch": "mlp"}, params)
+    ft = dict(params, embed=params["embed"] * 1.01)
+    ds.save("ft", {"arch": "mlp"}, ft, base_model="base")
+    ds.load("base")                          # warm every base layer
+    b0, d0 = ds.stats.loaded_bytes, ds.stats.delta_bytes
+    ds.load("ft")
+    read = ds.stats.loaded_bytes - b0
+    assert read == ds.stats.delta_bytes - d0 == ds.delta_bytes("ft")
+    assert 0 < read < ds.stored_bytes("base")
+
+
+def test_resave_base_invalidates_composed_cache(tmp_path, params):
+    """Re-saving a base must evict dependents' composed tensors — a
+    stale composition would serve old base + new nothing."""
+    ds = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    ds.save("base", {"arch": "mlp"}, params)
+    ft = dict(params, embed=params["embed"] + 1.0)
+    ds.save("ft", {"arch": "mlp"}, ft, base_model="base")
+    _, first = ds.load("ft")
+    base2 = dict(params, embed=params["embed"] * 2.0)
+    ds.save("base", {"arch": "mlp"}, base2)
+    _, second = ds.load("ft")
+    # the delta file still holds (old_ft - old_base); composed against
+    # the NEW base it must reflect the rewrite, not the cached tensor
+    np.testing.assert_allclose(
+        second["embed"],
+        base2["embed"] + (ft["embed"] - params["embed"]), atol=1e-6)
+    assert not np.allclose(second["embed"], first["embed"])
+
+
+def test_chained_finetune_composes_on_cold_cache(tmp_path, params):
+    """ft2 -> ft1 -> base: references resolve through the catalog and
+    deltas compose per hop, even with a cold layer cache (a raw delta
+    must never be served as weights)."""
+    def build(root):
+        ds = DecoupledStore(root / "dec", Catalog(root / "cat"))
+        ds.save("base", {"arch": "mlp"}, params)
+        ft1 = dict(params, embed=params["embed"] + 0.5)   # delta layer
+        ds.save("ft1", {"arch": "mlp"}, ft1, base_model="base")
+        # ft2 changes a layer ft1 inherited (ref->ref) and inherits the
+        # layer ft1 stored as a delta (ref->delta)
+        ft2 = dict(ft1)
+        ft2["layers"] = {"w1": params["layers"]["w1"] * 2.0,
+                         "b1": params["layers"]["b1"]}
+        ds.save("ft2", {"arch": "mlp"}, ft2, base_model="ft1")
+        return ds, ft2
+    ds, ft2 = build(tmp_path)
+    # cold cache: a fresh store over the same files (new process)
+    cold = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"),
+                          cache_layers=False)
+    for store in (ds, cold):
+        _, loaded = store.load("ft2")
+        np.testing.assert_allclose(loaded["embed"], ft2["embed"],
+                                   atol=1e-6)     # ref -> ft1's delta
+        np.testing.assert_allclose(loaded["layers/w1"],
+                                   ft2["layers"]["w1"], atol=1e-6)
+        np.testing.assert_array_equal(loaded["layers/b1"],
+                                      ft2["layers"]["b1"])  # ref -> ref
+    # row slices follow the chain too
+    rows = cold.load_layer_rows("ft2", "embed", 2, 6)
+    np.testing.assert_allclose(rows, ft2["embed"][2:6], atol=1e-6)
+    # an inherited-from-ft1 trunk-less fingerprint: ft2's unchanged
+    # 'embed' resolves to ft1's delta file, shared by both variants
+    li2 = next(li for li in cold.catalog.get_layers("ft2")
+               if li.layer_name == "embed")
+    li1 = next(li for li in cold.catalog.get_layers("ft1")
+               if li.layer_name == "embed")
+    assert cold._resolve_layer_path("ft2", li2) \
+        == cold._resolve_layer_path("ft1", li1)
+
+
+def test_resave_changes_trunk_fingerprint(tmp_path, params):
+    """Rewriting a model's tensors at the same paths must change every
+    identity derived from them: the fingerprint keys share-cache
+    entries and staged device weights, which would otherwise serve the
+    old tensors after a re-save."""
+    ds = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    base = {"trunk/W": params["embed"], "head/w": params["layers"]["b1"]}
+    ds.save("base", {"arch": "mlp"}, base)
+    fp0 = ds.trunk_fingerprint("base")
+    ft = dict(base, **{"trunk/W": base["trunk/W"] * 1.1})
+    ds.save("ft", {"arch": "mlp"}, ft, base_model="base")
+    ft_fp0 = ds.trunk_fingerprint("ft")
+    assert ft_fp0 != fp0                    # trunk delta: own identity
+    # re-save the fine-tune with a different trunk delta (same paths)
+    ds.save("ft", {"arch": "mlp"},
+            dict(base, **{"trunk/W": base["trunk/W"] * 1.2}),
+            base_model="base")
+    assert ds.trunk_fingerprint("ft") != ft_fp0
+    # re-save the base: its fingerprint AND every dependent's change —
+    # including the trunk-DELTA variant, whose composed tensor is
+    # new_base + old_delta even though its delta file is untouched
+    ft_fp1 = ds.trunk_fingerprint("ft")
+    base2 = dict(base, **{"trunk/W": base["trunk/W"] + 1.0})
+    ds.save("base", {"arch": "mlp"}, base2)
+    fp2 = ds.trunk_fingerprint("base")
+    assert fp2 != fp0
+    assert ds.trunk_fingerprint("ft") != ft_fp1
+    # a variant inheriting the rewritten trunk shares the NEW identity
+    ds.save("ref", {"arch": "mlp"}, dict(base2), base_model="base")
+    assert ds.trunk_fingerprint("ref") == fp2 != fp0
+
+
+def test_plain_read_rejects_delta_payload(tmp_path, params):
+    """Defense in depth: a FLAG_DELTA file catalogued as plain weights
+    raises instead of serving the delta tensor."""
+    ds = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    ds.save("base", {"arch": "mlp"}, params)
+    li = next(li for li in ds.catalog.get_layers("base")
+              if li.layer_name == "embed")
+    path = tmp_path / "dec" / "base" / li.file
+    path.write_bytes(mvec.encode(params["embed"], flags=mvec.FLAG_DELTA))
+    with pytest.raises(ValueError, match="FLAG_DELTA"):
+        ds.load("base")
 
 
 def test_api_registry_retry_cache_quota():
