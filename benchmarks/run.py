@@ -24,6 +24,9 @@ MODULES = [
     "bench_sharing",     # Fig 13
     "bench_engine",      # ours: end-to-end engine vs per-row inference
     "bench_serving",     # ours: MorphingServer vs per-request execution
+    "bench_sharding",    # ours: mesh-parallel embed lanes vs 1 device
+    #                    # (run standalone for real simulated devices:
+    #                    # earlier benches fix the jax device topology)
     "bench_roofline",    # ours: §Roofline summary
 ]
 
@@ -42,7 +45,8 @@ def main() -> int:
         except Exception:
             failed.append(mod_name)
             traceback.print_exc()
-    for artifact in ("BENCH_engine.json", "BENCH_serving.json"):
+    for artifact in ("BENCH_engine.json", "BENCH_serving.json",
+                     "BENCH_sharding.json"):
         if os.path.exists(artifact):
             print(f"# artifact: {artifact}")
     if failed:

@@ -18,6 +18,8 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import axis_size
+
 
 class EFState(NamedTuple):
     residual: Any  # pytree of f32 residuals, like grads
@@ -51,7 +53,7 @@ def compressed_psum(grads, ef: EFState, axis_name: str,
             lambda g: jax.lax.pmean(g.astype(jnp.float32), axis_name), grads)
         return red, ef
 
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
 
     def one(g, r):
         g = g.astype(jnp.float32) + r

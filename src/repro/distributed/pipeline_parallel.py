@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import axis_size
+
 
 def gpipe_apply(stage_fn: Callable, stage_params, microbatches: jax.Array,
                 *, axis: str) -> jax.Array:
@@ -23,7 +25,7 @@ def gpipe_apply(stage_fn: Callable, stage_params, microbatches: jax.Array,
     layer group. microbatches: [M, mb, ...] (replicated across stages).
     Returns [M, mb, ...] outputs of the final stage (replicated).
     """
-    S = jax.lax.axis_size(axis)
+    S = axis_size(axis)
     sid = jax.lax.axis_index(axis)
     M = microbatches.shape[0]
     T = M + S - 1
@@ -67,10 +69,11 @@ def make_pipelined_fn(stage_fn: Callable, mesh: Mesh, *, axis: str = "pod",
             local = jax.tree.map(lambda a: a[0], p)
             return gpipe_apply(lambda pp, x: stage_fn(pp, x), local, mb,
                                axis=axis)
-        return jax.shard_map(
+        from repro.distributed.sharding import shard_map
+        return shard_map(
             inner, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: pspec, stage_params), P()),
-            out_specs=P(), check_vma=False)(stage_params, microbatches)
+            out_specs=P())(stage_params, microbatches)
 
     return fn
 

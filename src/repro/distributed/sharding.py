@@ -101,6 +101,74 @@ def rules_for_config(cfg, *, multi_pod: bool = False,
                       overrides=overrides)
 
 
+SERVING_MESH_AXES: Tuple[str, ...] = ("data",)
+
+
+def serving_rules(overrides: Optional[Dict[str, AxisVal]] = None
+                  ) -> Dict[str, AxisVal]:
+    """Logical->physical table for the *serving* mesh (a 1-D "data" axis
+    over the inference devices). Trunk embed is data-parallel: activation
+    batches split over "data" while every weight axis stays replicated —
+    the trunks the zoo serves are small enough that staging one copy per
+    device is cheaper than cross-device weight gathers on the hot path.
+    """
+    rules: Dict[str, AxisVal] = {
+        # trunk weights: replicated (staged once per device via the
+        # batch-invariant NamedSharding below)
+        "embed": None,          # input width dim of W / centers
+        "mlp": None,            # output width dim of W
+        "vocab": None,
+        # activations: rows split across the mesh
+        "batch": ("data",),
+        "act_embed": None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def serving_batch_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding of a [rows, width] activation batch on the serving mesh."""
+    return named_sharding(mesh, ("batch", "act_embed"), serving_rules())
+
+
+def serving_weight_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Replicated sharding for a staged weight tensor (any rank)."""
+    axes = ("embed", "mlp")[:ndim] if ndim <= 2 else (None,) * ndim
+    return named_sharding(mesh, axes, serving_rules())
+
+
+def axis_size(axis_name: str) -> int:
+    """Version-portable mapped-axis size (inside shard_map bodies).
+
+    jax >= 0.5 has ``jax.lax.axis_size``; on 0.4.x the same static size
+    comes from ``jax.core.axis_frame``.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    import jax.core as _core
+    return int(_core.axis_frame(axis_name))
+
+
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs,
+              check_replication: bool = False):
+    """Version-portable ``shard_map``.
+
+    jax >= 0.5 exposes ``jax.shard_map`` (replication checking via
+    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map``
+    (``check_rep``). Call sites in this repo always want the check off —
+    Pallas calls and collectives inside the body defeat the checker —
+    so both spellings are bridged behind one keyword.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             check_vma=check_replication)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_replication)
+
+
 # ---------------------------------------------------------------------------
 # Resolution + annotation
 # ---------------------------------------------------------------------------

@@ -118,6 +118,11 @@ class ServerStats:
     # variant (ResolvedModel.base_model_id) riding a shared trunk lane
     lanes: int = 0                   # live embed/predict lanes
     tasks_by_lane: Dict[str, int] = field(default_factory=dict)
+    # mesh dimension: how many devices the trunk embed lanes span, and
+    # the measured aggregate embed rate across them (rows the trunks
+    # actually computed / their wall seconds — share hits excluded)
+    devices: int = 1
+    mesh_rows_per_s: float = 0.0
     delta_tasks: int = 0             # served tasks that are fine-tunes
     delta_loaded_bytes: int = 0      # disk bytes their resolutions read
     #                                # (≈ K·delta when the base is warm)
@@ -195,13 +200,29 @@ class MorphingServer:
     def __init__(self, session: Optional[MorphingSession] = None, *,
                  max_wait_s: float = 0.002, idle_wait_s: float = 0.05,
                  mem_cap_bytes: float = 2e9, nrows_hint: int = 2048,
-                 share_lanes: bool = True, **session_kw):
-        self.session = session or MorphingSession(**session_kw)
+                 share_lanes: bool = True, devices: Optional[int] = None,
+                 stop_timeout_s: float = 30.0, **session_kw):
+        if session is None:
+            if devices is not None:
+                session_kw.setdefault("device_count", devices)
+            session = MorphingSession(**session_kw)
+        elif devices is not None and devices != getattr(
+                session, "device_count", 1):
+            raise ValueError(
+                f"devices={devices} conflicts with the session's backend "
+                f"pool ({getattr(session, 'device_count', 1)} devices); "
+                "construct the session with device_count instead")
+        self.session = session
+        # effective mesh width of the session's backend pool (clamped to
+        # real devices): trunk embed lanes size their Eq. 11 row budgets
+        # against this many devices' aggregate throughput
+        self.devices = getattr(session, "device_count", 1)
         self.max_wait_s = max_wait_s
         self.idle_wait_s = idle_wait_s
         self.mem_cap_bytes = mem_cap_bytes
         self.nrows_hint = nrows_hint
         self.share_lanes = share_lanes
+        self.stop_timeout_s = stop_timeout_s
         self._lanes: Dict[str, _Lane] = {}
         self._lane_of_task: Dict[str, _Lane] = {}
         self._task_of: Dict[int, str] = {}
@@ -219,18 +240,37 @@ class MorphingServer:
                 lane.batcher.start()
         return self
 
-    def stop(self, drain: bool = True) -> None:
+    def stop(self, drain: bool = True,
+             timeout: Optional[float] = None) -> None:
         """Stop every lane. With ``drain`` (default) queued requests are
         served before the workers join — including their share-cache
         write-backs; otherwise they are dropped and their ``result()``
-        calls raise."""
+        calls raise.
+
+        Workers are joined with a per-lane ``timeout`` (default
+        ``stop_timeout_s``); a worker stuck in a step — a wedged backend,
+        a deadlocked kernel — surfaces as a RuntimeError naming the
+        stuck lanes instead of hanging the shutdown forever. The stuck
+        workers stay daemon threads; a later ``stop()`` retries the
+        join."""
         with self._lock:
             if not self._running:
                 return
             self._running = False
             lanes = list(self._lanes.values())
+        timeout = self.stop_timeout_s if timeout is None else timeout
+        stuck: List[str] = []
         for lane in lanes:
-            lane.batcher.stop(drain=drain)
+            try:
+                lane.batcher.stop(drain=drain, timeout=timeout)
+            except TimeoutError:
+                stuck.append(lane.key)
+        if stuck:
+            raise RuntimeError(
+                f"serving lane worker(s) did not join within {timeout}s: "
+                f"{stuck}; their step functions are still running "
+                "(wedged backend?) — results for their pending requests "
+                "will not arrive")
 
     def __enter__(self) -> "MorphingServer":
         return self.start()
@@ -326,6 +366,14 @@ class MorphingServer:
             batch_rows = choose_batch_size(
                 embed_prof, device, candidates=_LANE_BATCH_CANDIDATES,
                 mem_cap_bytes=self.mem_cap_bytes, hw=sess.hw)
+            # mesh lanes budget against aggregate throughput: each of the
+            # N devices takes batch/N rows, so the Eq. 11 optimum for one
+            # device scales to N devices at the same per-device latency
+            # and memory footprint (capped at the candidate ceiling)
+            n_dev = int(getattr(backend, "device_count", 1))
+            if n_dev > 1:
+                batch_rows = min(batch_rows * n_dev,
+                                 _LANE_BATCH_CANDIDATES[-1])
             # the staging identity is the trunk fingerprint (matching
             # MorphingSession._stage_all): fine-tunes riding this lane
             # reuse the one staged base trunk instead of re-staging K
@@ -488,8 +536,10 @@ class MorphingServer:
     # -- telemetry ---------------------------------------------------------
     def stats(self) -> ServerStats:
         st = ServerStats()
+        st.devices = self.devices
         lat: List[float] = []
         coalesced: List[int] = []
+        embed_seconds = 0.0
         with self._lock:
             lanes = list(self._lanes.values())
         st.lanes = len(lanes)
@@ -514,6 +564,7 @@ class MorphingServer:
                 st.embed_rows += lane.spec.stats.rows
                 st.embed_batches += lane.spec.stats.batches
                 st.infer_seconds += lane.spec.stats.infer_seconds
+                embed_seconds += lane.spec.stats.infer_seconds
                 for h in heads:
                     st.rows += h.spec.stats.rows     # every served row
                     st.head_rows += h.spec.stats.rows  # passes one head
@@ -524,6 +575,8 @@ class MorphingServer:
                 st.infer_seconds += lane.spec.stats.infer_seconds
             lat.extend(lane_lat)
             coalesced.extend(lane_sizes)
+        if embed_seconds:
+            st.mesh_rows_per_s = st.embed_rows / embed_seconds
         if coalesced:
             st.mean_coalesced = float(np.mean(coalesced))
         if lat:

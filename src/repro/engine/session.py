@@ -35,7 +35,8 @@ from repro.engine.plan import (CompileContext, LogicalPlan, compile_plan,
                                optimize)
 from repro.engine.sql import CreateTaskStmt, QueryStmt, parse
 from repro.pipeline.backend import (ExecutionBackend, JaxBackend,
-                                    NumpyBackend, make_backends)
+                                    MeshJaxBackend, NumpyBackend,
+                                    make_backends)
 from repro.pipeline.batcher import BatcherStats
 from repro.pipeline.cost import (HardwareProfile, OpProfile, calibrate,
                                  delta_staged_profile, profile_for_model)
@@ -155,7 +156,15 @@ def _fast_profile(backend: ExecutionBackend,
     """Measured HardwareProfile for a backend's *class* (memoized). A
     fresh probe instance of the same flavour is calibrated so the live
     backend's stage/compile counters stay untouched."""
-    if isinstance(backend, JaxBackend):
+    if isinstance(backend, MeshJaxBackend):
+        # a mesh profile is per-(flavour, mesh size): the aggregate rate
+        # the serving lanes size against depends on how many devices the
+        # mesh spans. The probe shares the live mesh — building a second
+        # mesh over the same devices would be pure overhead.
+        key = ("jax-mesh", backend.interpret, backend.device_count)
+        probe_fn = lambda: MeshJaxBackend(  # noqa: E731
+            mesh=backend.mesh, interpret=backend.interpret)
+    elif isinstance(backend, JaxBackend):
         key = ("jax", backend.interpret)
         probe_fn = lambda: JaxBackend(interpret=backend.interpret)  # noqa: E731
     elif isinstance(backend, NumpyBackend):
@@ -178,6 +187,7 @@ class MorphingSession:
     def __init__(self, selector=None, zoo: Optional[List[ZooModel]] = None,
                  root: Optional[Path] = None, *,
                  devices: Tuple[str, ...] = ("host", "tpu"),
+                 device_count: int = 1,
                  backend: str = "auto", enable_share: bool = True,
                  chunk_rows: int = 256, max_inflight: int = 3,
                  workers: int = 4, optimize_plans: bool = True,
@@ -197,8 +207,13 @@ class MorphingSession:
         self.registry = TaskRegistry(selector=selector, zoo=zoo)
         self.zoo = zoo or []
         self.devices = devices
-        self.backends: Dict[str, ExecutionBackend] = make_backends(
-            backend, devices=devices)
+        # the pool is dict-compatible with the old registry; with
+        # device_count > 1 its jax annotation spans a mesh (clamped to
+        # the devices jax actually exposes — a clamp to 1 falls back to
+        # the parity-exact single-device backends)
+        self.backends = make_backends(
+            backend, devices=devices, device_count=device_count)
+        self.device_count = getattr(self.backends, "device_count", 1)
         self.enable_share = enable_share
         self.hw: Optional[Dict[str, HardwareProfile]] = None
         self.chunk_rows = chunk_rows

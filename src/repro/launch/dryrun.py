@@ -138,6 +138,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         compile_s = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # jax 0.4.x: list of one dict
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     mem_d = {}
     for f in ("argument_size_in_bytes", "output_size_in_bytes",

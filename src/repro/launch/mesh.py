@@ -7,20 +7,39 @@ multi-pod: 2x16x16 = 512 chips ("pod","data","model").
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                     # jax >= 0.5 explicit axis types
+    from jax.sharding import AxisType
+except ImportError:      # older jax: make_mesh has no axis_types kwarg
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 4) -> Mesh:
     """Small mesh over host devices for multi-device tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(device_count: int) -> Mesh:
+    """1-D ("data",) mesh over the first ``device_count`` devices — the
+    mesh the serving backend pool's data-parallel embed lanes span."""
+    import numpy as np
+    avail = jax.devices()
+    n = max(1, min(int(device_count), len(avail)))
+    return Mesh(np.array(avail[:n]), ("data",))
 
 
 def dp_size(mesh: Mesh) -> int:

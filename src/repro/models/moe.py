@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import axis_size
 from repro.models.spec import P
 
 
@@ -143,7 +144,7 @@ def moe_ragged_local(cfg, p: dict, x: jax.Array, *,
     E_local = wi.shape[0]
     ep = 1
     if ep_axis is not None:
-        ep = jax.lax.axis_size(ep_axis)
+        ep = axis_size(ep_axis)
         rank = jax.lax.axis_index(ep_axis)
         local_id = idx - rank * E_local
     else:
@@ -213,7 +214,7 @@ def moe_batched_local(cfg, p: dict, x: jax.Array, *,
     E_local = wi.shape[0]
     ep = 1
     if ep_axis is not None:
-        ep = jax.lax.axis_size(ep_axis)
+        ep = axis_size(ep_axis)
         rank = jax.lax.axis_index(ep_axis)
         local_id = idx - rank * E_local
     else:
@@ -287,7 +288,8 @@ def moe_apply(cfg, p: dict, x: jax.Array, *, mesh=None, ep_axis: str = "model",
         return local(cfg, pl, xl, ep_axis=ep_axis,
                      fsdp_axis=fsdp, dp_axis=dp)
 
-    y, aux = jax.shard_map(
+    from repro.distributed.sharding import shard_map
+    y, aux = shard_map(
         inner, mesh=mesh, in_specs=(x_spec, p_specs),
-        out_specs=(x_spec, PS()), check_vma=False)(x, p)
+        out_specs=(x_spec, PS()))(x, p)
     return y, aux

@@ -229,49 +229,81 @@ class JaxBackend(ExecutionBackend):
             = None
 
     # -- staging ----------------------------------------------------------
+    def _put_weight(self, arr) -> Any:
+        """Move one weight tensor onto the execution device(s). The mesh
+        subclass overrides this to stage once per mesh with a replicated
+        NamedSharding; the base class targets the default device."""
+        jnp = self._jax.numpy
+        return self._jax.device_put(jnp.asarray(arr, jnp.float32))
+
+    def _raw_forward(self, zoo_model) -> Tuple[str, int, int,
+                                               Callable, Tuple[Any, ...]]:
+        """Build the uncompiled forward for one resolved model.
+
+        Returns ``(mode, in_dim, out_dim, raw, weights)`` where
+        ``raw(X, *weights)`` maps a [B, in_dim] batch to features and the
+        weights are already device-resident (:meth:`_put_weight`).
+        Weights are explicit arguments — not closure captures — so the
+        mesh subclass can hand them to ``shard_map`` with replicated
+        in_specs while the batch splits over the mesh.
+        """
+        jnp = self._jax.numpy
+        from repro.kernels.fused_embed import fused_embed
+
+        mode = zoo_model.mode
+        W = self._put_weight(zoo_model.W)
+        in_dim = int(zoo_model.W.shape[0])
+        if mode == "radial":
+            centers = self._put_weight(zoo_model.centers)
+            inv_two_sig2 = 1.0 / (2.0 * float(zoo_model.sigma) ** 2)
+            out_dim = int(zoo_model.centers.shape[0])
+
+            def raw(X, centers):
+                d2 = ((X[:, None, :] - centers[None]) ** 2).sum(-1)
+                return jnp.exp(-d2 * inv_two_sig2)
+            return mode, in_dim, out_dim, raw, (centers,)
+        if mode == "relu":
+            out_dim = int(zoo_model.W.shape[1])
+
+            def raw(X, W):
+                return jnp.maximum(X @ W, 0.0)
+            return mode, in_dim, out_dim, raw, (W,)
+        if mode == "proj1d":
+            out_dim = 2 * int(zoo_model.W.shape[1])
+
+            def raw(X, W):
+                Z = X @ W
+                return jnp.tanh(jnp.concatenate([Z, Z ** 2 - 1.0], axis=1))
+            return mode, in_dim, out_dim, raw, (W,)
+        # linear -> fused normalize+project+tanh Pallas kernel
+        out_dim = int(zoo_model.W.shape[1])
+        interpret = self.interpret
+        block_rows = self.block_rows
+
+        def raw(X, W):
+            return fused_embed(X, W, block_rows=block_rows,
+                               interpret=interpret)
+        return mode, in_dim, out_dim, raw, (W,)
+
+    def _compile_forward(self, raw: Callable,
+                         weights: Tuple[Any, ...]) -> Tuple[Callable,
+                                                            Callable]:
+        """(features_fn, predict_fn) from the raw forward. Overridden by
+        the mesh subclass to split the batch axis across devices."""
+        jax, jnp = self._jax, self._jax.numpy
+        return (jax.jit(lambda X: raw(X, *weights)),
+                jax.jit(lambda X: raw(X, *weights)
+                        .astype(jnp.float32).mean(axis=1)))
+
     def stage(self, version: str, zoo_model) -> StagedModel:
         with self._lock:
             if version in self._staged:
                 return self._staged[version]
-        jax, jnp = self._jax, self._jax.numpy
-        from repro.kernels.fused_embed import fused_embed
-
-        mode = zoo_model.mode
-        W = jax.device_put(jnp.asarray(zoo_model.W, jnp.float32))
-        in_dim = int(zoo_model.W.shape[0])
-        if mode == "radial":
-            centers = jax.device_put(
-                jnp.asarray(zoo_model.centers, jnp.float32))
-            inv_two_sig2 = 1.0 / (2.0 * float(zoo_model.sigma) ** 2)
-            out_dim = int(zoo_model.centers.shape[0])
-
-            def raw(X):
-                d2 = ((X[:, None, :] - centers[None]) ** 2).sum(-1)
-                return jnp.exp(-d2 * inv_two_sig2)
-        elif mode == "relu":
-            out_dim = int(zoo_model.W.shape[1])
-
-            def raw(X):
-                return jnp.maximum(X @ W, 0.0)
-        elif mode == "proj1d":
-            out_dim = 2 * int(zoo_model.W.shape[1])
-
-            def raw(X):
-                Z = X @ W
-                return jnp.tanh(jnp.concatenate([Z, Z ** 2 - 1.0], axis=1))
-        else:  # linear -> fused normalize+project+tanh Pallas kernel
-            out_dim = int(zoo_model.W.shape[1])
-            interpret = self.interpret
-            block_rows = self.block_rows
-
-            def raw(X):
-                return fused_embed(X, W, block_rows=block_rows,
-                                   interpret=interpret)
+        mode, in_dim, out_dim, raw, weights = self._raw_forward(zoo_model)
+        features_fn, predict_fn = self._compile_forward(raw, weights)
         staged = StagedModel(
             version=version, mode=mode, in_dim=in_dim, out_dim=out_dim,
-            features_fn=jax.jit(raw),
-            predict_fn=jax.jit(
-                lambda X: raw(X).astype(jnp.float32).mean(axis=1)))
+            features_fn=features_fn, predict_fn=predict_fn)
         with self._lock:
             if version not in self._staged:   # lost race: first stage wins
                 self._staged[version] = staged
@@ -292,6 +324,13 @@ class JaxBackend(ExecutionBackend):
             staged = self.stage(spec.version, spec.model.zoo_model)
         return staged
 
+    def _bucket_for(self, n: int) -> int:
+        """Padded row count for an n-row chunk. The mesh subclass rounds
+        up to a multiple of the mesh size so every device gets an equal
+        slice of the batch axis (a power-of-two bucket already is one
+        for power-of-two meshes, keeping compile telemetry identical)."""
+        return max(_next_pow2(n), self.min_bucket)
+
     def _bucketed(self, staged: StagedModel, fn_key: str, fn: Callable,
                   X: np.ndarray, out_shape: Tuple[int, ...]) -> np.ndarray:
         n = len(X)
@@ -299,7 +338,7 @@ class JaxBackend(ExecutionBackend):
             return np.zeros(out_shape, np.float32)
         Xp = adapt_input_width(np.asarray(X, np.float32), staged.in_dim)
         d = staged.in_dim
-        bucket = max(_next_pow2(n), self.min_bucket)
+        bucket = self._bucket_for(n)
         if bucket == n:                       # aligned chunk: no pad copy
             Xb = np.ascontiguousarray(Xp)
         else:
@@ -363,6 +402,82 @@ class JaxBackend(ExecutionBackend):
         return buf.nbytes / max(best, 1e-9)
 
 
+class MeshJaxBackend(JaxBackend):
+    """Data-parallel jit path over a :class:`jax.sharding.Mesh`.
+
+    Staging moves each trunk's weights onto the mesh *once*, replicated
+    under the serving rule table (``repro.distributed.sharding``:
+    ``serving_rules`` maps every weight axis to ``None`` and the batch
+    axis to ``"data"``); the compiled forward wraps the raw per-device
+    function in ``shard_map``, so an embed chunk's rows split evenly
+    across the mesh and each device runs the same kernels (including the
+    Pallas fused-embed path) on its local shard. Shape bucketing rounds
+    chunk rows up to a mesh-size multiple — for power-of-two meshes the
+    existing power-of-two buckets already qualify, so compile telemetry
+    matches the single-device backend.
+    """
+
+    name = "jax-mesh"
+
+    def __init__(self, mesh=None, *, device_count: Optional[int] = None,
+                 interpret: Optional[bool] = None, min_bucket: int = 32,
+                 block_rows: int = 256):
+        super().__init__(interpret=interpret, min_bucket=min_bucket,
+                         block_rows=block_rows)
+        jax = self._jax
+        if mesh is None:
+            from repro.launch.mesh import make_serving_mesh
+            n = (len(jax.devices()) if device_count is None
+                 else int(device_count))
+            mesh = make_serving_mesh(n)
+        self.mesh = mesh
+        self.device_count = int(np.prod(list(mesh.shape.values())))
+
+    # -- mesh staging + compilation ---------------------------------------
+    def _put_weight(self, arr) -> Any:
+        from repro.distributed.sharding import serving_weight_sharding
+        jnp = self._jax.numpy
+        a = jnp.asarray(arr, jnp.float32)
+        return self._jax.device_put(
+            a, serving_weight_sharding(self.mesh, a.ndim))
+
+    def _compile_forward(self, raw, weights):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import serving_batch_sharding
+        jax, jnp = self._jax, self._jax.numpy
+        # batch rows split over "data"; weights replicated on every
+        # device (they were staged that way) — check_rep off because the
+        # Pallas fused-embed call defeats the replication checker
+        sharded = shard_map(
+            raw, mesh=self.mesh,
+            in_specs=(P("data"),) + (P(),) * len(weights),
+            out_specs=P("data"), check_rep=False)
+        x_sharding = serving_batch_sharding(self.mesh)
+        features_fn = jax.jit(lambda X: sharded(X, *weights),
+                              in_shardings=x_sharding)
+        predict_fn = jax.jit(
+            lambda X: sharded(X, *weights)
+            .astype(jnp.float32).mean(axis=1),
+            in_shardings=x_sharding)
+        return features_fn, predict_fn
+
+    def _bucket_for(self, n: int) -> int:
+        b = max(_next_pow2(n), self.min_bucket)
+        nd = self.device_count
+        return -(-b // nd) * nd
+
+    # -- calibration hooks -------------------------------------------------
+    def per_device_probe(self) -> JaxBackend:
+        """A fresh single-device backend of the same flavour, so
+        ``cost.calibrate`` can report the per-device rate next to the
+        mesh-aggregate rate it measures through this backend."""
+        return JaxBackend(interpret=self.interpret,
+                          min_bucket=self.min_bucket,
+                          block_rows=self.block_rows)
+
+
 _HOST_BACKEND: Optional[NumpyBackend] = None
 
 
@@ -375,30 +490,82 @@ def default_host_backend() -> NumpyBackend:
     return _HOST_BACKEND
 
 
+class BackendPool(Dict[str, ExecutionBackend]):
+    """Placement-aware ``{device annotation -> backend}`` pool.
+
+    A drop-in replacement for the plain registry dict ``make_backends``
+    used to return (same mapping protocol, so planner/session/server
+    lookups are untouched) that additionally owns the *mesh dimension*
+    of placement: ``device_count`` is how many devices the accelerator
+    annotation actually spans, and ``mesh`` is the live
+    ``jax.sharding.Mesh`` when it spans more than one. Single-device
+    pools (``device_count == 1``) carry no mesh and hold exactly the
+    backends the old registry built — the parity-exact fallback path.
+    """
+
+    def __init__(self, mapping: Dict[str, ExecutionBackend], *,
+                 kind: str = "auto", device_count: int = 1, mesh=None):
+        super().__init__(mapping)
+        self.kind = kind
+        self.device_count = int(device_count)
+        self.mesh = mesh
+
+    def backend_for(self, device: str) -> ExecutionBackend:
+        return self.get(device) or default_host_backend()
+
+    def distinct(self) -> List[ExecutionBackend]:
+        return list({id(b): b for b in self.values()}.values())
+
+
+def _mesh_jax_backend(device_count: int) -> Tuple[Optional[JaxBackend],
+                                                  int, Any]:
+    """(backend, effective device count, mesh) for an accelerator slot.
+
+    ``device_count`` is clamped to the devices jax actually exposes
+    (simulated host devices count via ``xla_force_host_platform_
+    device_count``); a clamp to one device degrades to the plain
+    single-device :class:`JaxBackend` — byte-identical to the
+    pre-mesh path.
+    """
+    import jax
+    n = max(1, min(int(device_count), len(jax.devices())))
+    if n == 1:
+        return JaxBackend(), 1, None
+    b = MeshJaxBackend(device_count=n)
+    return b, b.device_count, b.mesh
+
+
 def make_backends(kind: str = "auto",
-                  devices: Tuple[str, ...] = ("host", "tpu")
-                  ) -> Dict[str, ExecutionBackend]:
-    """Build the device-annotation -> backend registry.
+                  devices: Tuple[str, ...] = ("host", "tpu"),
+                  device_count: int = 1) -> BackendPool:
+    """Build the placement-aware backend pool.
 
     'auto'  -> host: numpy, tpu: jax (numpy fallback if jax is missing)
     'numpy' -> every device runs the host numpy path
     'jax'   -> every device runs the jitted path (CPU = interpret kernels)
+
+    ``device_count > 1`` asks for a mesh: the jax-backed annotations are
+    served by one :class:`MeshJaxBackend` spanning ``min(device_count,
+    jax.device_count())`` devices. The numpy path has no devices to
+    span, so a pure-numpy pool always reports ``device_count == 1``.
     """
     np_b = NumpyBackend()
     if kind == "numpy":
-        return {d: np_b for d in devices}
+        return BackendPool({d: np_b for d in devices}, kind=kind)
     if kind == "jax":
-        jb = JaxBackend()
-        return {d: jb for d in devices}
+        jb, n, mesh = _mesh_jax_backend(device_count)
+        return BackendPool({d: jb for d in devices}, kind=kind,
+                           device_count=n, mesh=mesh)
     if kind != "auto":
         raise ValueError(f"unknown backend kind {kind!r}")
     reg: Dict[str, ExecutionBackend] = {}
+    n_eff, mesh = 1, None
     for d in devices:
         if d == "tpu":
             try:
-                reg[d] = JaxBackend()
+                reg[d], n_eff, mesh = _mesh_jax_backend(device_count)
             except Exception:                 # jax unavailable: degrade
                 reg[d] = np_b
         else:
             reg[d] = np_b
-    return reg
+    return BackendPool(reg, kind=kind, device_count=n_eff, mesh=mesh)

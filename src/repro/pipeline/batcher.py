@@ -304,7 +304,13 @@ class ContinuousBatcher:
              timeout: Optional[float] = None) -> Dict[int, Any]:
         """Shut the worker down. With ``drain`` (default) every queued
         request is served first; otherwise unserved requests are dropped
-        and their ``result()`` calls fail."""
+        and their ``result()`` calls fail.
+
+        ``timeout`` bounds the worker join: a worker that has not exited
+        within it (a step function wedged in a backend call) raises
+        TimeoutError instead of hanging the caller forever. The worker
+        reference is kept so a later ``stop()`` can retry the join once
+        the step returns."""
         # _stop is set inside the cv block so submit()'s check-and-put
         # is atomic against it: a request is either rejected, failed
         # here (drain=False), or guaranteed served by the drain
@@ -325,6 +331,10 @@ class ContinuousBatcher:
             self._cv.notify_all()
         if self._thread is not None:
             self._thread.join(timeout=timeout)
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    f"batcher worker did not join within {timeout}s; "
+                    "its step function is still running")
             self._thread = None
         elif drain:
             # never started: no worker owns the drain, so serve the

@@ -63,6 +63,20 @@ class HardwareProfile:
     link_bw: float = float("inf")
     launch_latency_s: float = 0.0
     measured: bool = False
+    # mesh dimension: how many devices the profile's throughput numbers
+    # aggregate over. ``flops_per_s``/``mem_bw`` are *mesh-aggregate*
+    # (what Eq. 6/11 see for a batch split across the mesh);
+    # ``device_flops_per_s`` is the measured single-device rate, so the
+    # scaling efficiency is device_flops_per_s * device_count vs
+    # flops_per_s. 0.0 means "not separately measured" and reads as the
+    # aggregate divided evenly.
+    device_count: int = 1
+    device_flops_per_s: float = 0.0
+
+    @property
+    def per_device_flops(self) -> float:
+        return (self.device_flops_per_s
+                or self.flops_per_s / max(self.device_count, 1))
 
 
 DEFAULT_HW: Dict[str, HardwareProfile] = {
@@ -245,7 +259,44 @@ def calibrate(backend, device: str = "host", *,
     real overhead (batching loops, jit dispatch, padding) that spec-sheet
     constants miss. Link bandwidth is measured from a staging transfer
     when the backend exposes one (``measure_link_bandwidth``).
+
+    Mesh backends (``backend.device_count > 1``) are measured twice: the
+    main fit runs through the mesh (so ``flops_per_s``/``mem_bw`` are the
+    *aggregate* rates Eq. 11 sizes row budgets against), and a fresh
+    single-device probe (``backend.per_device_probe()``) supplies the
+    per-device rate recorded in ``device_flops_per_s``.
     """
+    per_row, launch = _fit_per_row(backend, device, dim=dim, width=width,
+                                   rows=rows, repeats=repeats, seed=seed)
+    flops_per_row = 2.0 * dim * width + width      # matmul + tanh
+    bytes_per_row = 4.0 * (dim + width)
+    link_bw = DEFAULT_HW.get(device, DEFAULT_HW["host"]).link_bw
+    measure_link = getattr(backend, "measure_link_bandwidth", None)
+    if measure_link is not None:
+        link_bw = measure_link()
+    n_dev = int(getattr(backend, "device_count", 1))
+    device_flops = 0.0
+    probe_fn = getattr(backend, "per_device_probe", None)
+    if n_dev > 1 and probe_fn is not None:
+        dev_per_row, _ = _fit_per_row(probe_fn(), device, dim=dim,
+                                      width=width, rows=rows,
+                                      repeats=repeats, seed=seed)
+        device_flops = flops_per_row / dev_per_row
+    return HardwareProfile(
+        name=device,
+        flops_per_s=flops_per_row / per_row,
+        mem_bw=bytes_per_row / per_row,
+        link_bw=link_bw,
+        launch_latency_s=launch,
+        measured=True,
+        device_count=n_dev,
+        device_flops_per_s=device_flops)
+
+
+def _fit_per_row(backend, device: str, *, dim: int, width: int, rows,
+                 repeats: int, seed: int) -> Tuple[float, float]:
+    """Two-point linear fit of the backend's embed time: (per-row
+    seconds, launch latency)."""
     import numpy as np
 
     from repro.pipeline.backend import InferSpec  # lazy import: cycle
@@ -278,19 +329,7 @@ def calibrate(backend, device: str = "host", *,
     t0_, t1_ = times[0], times[-1]
     per_row = max((t1_ - t0_) / max(n1 - n0, 1), 1e-12)
     launch = max(t0_ - n0 * per_row, 0.0)
-    flops_per_row = 2.0 * dim * width + width      # matmul + tanh
-    bytes_per_row = 4.0 * (dim + width)
-    link_bw = DEFAULT_HW.get(device, DEFAULT_HW["host"]).link_bw
-    measure_link = getattr(backend, "measure_link_bandwidth", None)
-    if measure_link is not None:
-        link_bw = measure_link()
-    return HardwareProfile(
-        name=device,
-        flops_per_s=flops_per_row / per_row,
-        mem_bw=bytes_per_row / per_row,
-        link_bw=link_bw,
-        launch_latency_s=launch,
-        measured=True)
+    return per_row, launch
 
 
 class _CalibModel:

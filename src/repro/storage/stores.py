@@ -30,6 +30,7 @@ import pickle
 import threading
 import time
 import zlib
+from collections import OrderedDict
 from dataclasses import dataclass, replace as dc_replace
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -125,6 +126,9 @@ class StoreStats:
     loaded_bytes: int = 0        # bytes read from disk
     cache_hits: int = 0
     cache_hit_bytes: int = 0     # bytes served from the layer cache
+    cache_evictions: int = 0     # tensors LRU-evicted over the byte cap
+    cache_evicted_bytes: int = 0
+    cache_bytes: int = 0         # tensor bytes currently held (gauge)
     delta_composes: int = 0      # base+delta compositions performed
     delta_bytes: int = 0         # delta bytes (subset of loaded_bytes)
 
@@ -154,13 +158,18 @@ class DecoupledStore:
     """
 
     def __init__(self, root: Path, catalog: Optional[Catalog] = None,
-                 cache_layers: bool = True):
+                 cache_layers: bool = True,
+                 cache_capacity_bytes: int = 256 << 20):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.catalog = catalog or Catalog(self.root / "_catalog")
         self.cache_layers = cache_layers
-        self._layer_cache: Dict[Tuple[str, Optional[Tuple[int, int]]],
-                                np.ndarray] = {}
+        # byte-capped LRU: a long-lived session resolving many models
+        # (a delta fleet's composed trunks, analytics over a wide zoo)
+        # must not grow the cross-model tensor cache without bound.
+        # Insertion order == recency order (moved-to-end on hit).
+        self.cache_capacity_bytes = int(cache_capacity_bytes)
+        self._layer_cache: "OrderedDict[Tuple[str, Optional[Tuple[int, int]]], np.ndarray]" = OrderedDict()
         self._cache_lock = threading.Lock()
         self.stats = StoreStats()
 
@@ -188,8 +197,9 @@ class DecoupledStore:
         # separator suffix: 'm1' must not evict 'm10'
         prefixes = tuple(str(self._dir(m)) + os.sep for m in stale)
         with self._cache_lock:
-            self._layer_cache = {k: v for k, v in self._layer_cache.items()
-                                 if not k[0].startswith(prefixes)}
+            for k in [k for k in self._layer_cache
+                      if k[0].startswith(prefixes)]:
+                self.stats.cache_bytes -= self._layer_cache.pop(k).nbytes
         (d / "architecture.json").write_text(json.dumps(arch_meta, indent=1))
         flat = flatten_params(params)
         base_flat: Dict[str, Any] = {}
@@ -338,15 +348,31 @@ class DecoupledStore:
             return None
         with self._cache_lock:
             cached = self._layer_cache.get(key)
+            if cached is not None:
+                self._layer_cache.move_to_end(key)   # freshen LRU order
         if cached is not None:
             self.stats.cache_hits += 1
             self.stats.cache_hit_bytes += cached.nbytes
         return cached
 
     def _cache_put(self, key, arr) -> None:
-        if self.cache_layers:
-            with self._cache_lock:
-                self._layer_cache[key] = arr
+        if not self.cache_layers:
+            return
+        nbytes = int(np.asarray(arr).nbytes)
+        cap = self.cache_capacity_bytes
+        if nbytes > cap:
+            return          # a tensor bigger than the cache never enters
+        with self._cache_lock:
+            old = self._layer_cache.pop(key, None)
+            if old is not None:
+                self.stats.cache_bytes -= old.nbytes
+            self._layer_cache[key] = arr
+            self.stats.cache_bytes += nbytes
+            while self.stats.cache_bytes > cap and self._layer_cache:
+                _, victim = self._layer_cache.popitem(last=False)
+                self.stats.cache_bytes -= victim.nbytes
+                self.stats.cache_evictions += 1
+                self.stats.cache_evicted_bytes += victim.nbytes
 
     def _read_layer_file(self, model_id: str, li: LayerInfo,
                          rows: Optional[Tuple[int, int]] = None):

@@ -100,6 +100,7 @@ def test_gradient_compression_psum():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import (compressed_psum,
                                                    init_ef_state)
+        from repro.distributed.sharding import shard_map
         from repro.launch.mesh import make_host_mesh
 
         mesh = make_host_mesh(8, 1)
@@ -113,7 +114,7 @@ def test_gradient_compression_psum():
                 red, ef = compressed_psum(gl, ef, 'data', enabled=enabled)
                 resid = {k: v[None] for k, v in ef.residual.items()}
                 return red, resid
-            return jax.shard_map(
+            return shard_map(
                 f, mesh=mesh,
                 in_specs=({'w': P('data', None), 'b': P('data', None)},),
                 out_specs=({'w': P(), 'b': P()},
@@ -146,10 +147,8 @@ def test_dryrun_lowering_small_mesh():
         import repro.launch.dryrun as dr
         import repro.launch.mesh as mesh_mod
         def small(multi_pod=False):
-            import jax
-            from jax.sharding import AxisType
-            return jax.make_mesh((2, 4), ('data', 'model'),
-                                 axis_types=(AxisType.Auto,) * 2)
+            # make_host_mesh handles the AxisType compat across jax pins
+            return mesh_mod.make_host_mesh(2, 4)
         mesh_mod.make_production_mesh = small
         dr.make_production_mesh = small
         rec, compiled = lower_cell('gemma-2b', 'decode_32k', False)

@@ -25,10 +25,11 @@ def test_gpipe_matches_sequential_forward_and_grad():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.pipeline_parallel import (
             gpipe_apply, make_pipelined_fn, pipeline_bubble_fraction)
+        from repro.launch.mesh import _make_mesh
 
         S, L_per, D, M, mb = 4, 2, 16, 8, 4
-        mesh = jax.make_mesh((S,), ('pod',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        # _make_mesh handles the AxisType compat across jax pins
+        mesh = _make_mesh((S,), ('pod',))
         rng = jax.random.PRNGKey(0)
         # stage params: [S, L_per, D, D]
         Ws = jax.random.normal(rng, (S, L_per, D, D)) * (0.5 / D ** 0.5)

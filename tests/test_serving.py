@@ -145,6 +145,30 @@ def test_batcher_stop_without_drain_fails_pending():
     assert dropped > 0               # queued requests were failed, not lost
 
 
+def test_batcher_stop_join_timeout_raises_then_retries():
+    """A worker wedged inside its step surfaces as TimeoutError from
+    stop() instead of hanging the caller; once the step returns, a
+    second stop() retries the join and succeeds."""
+    release = threading.Event()
+    entered = threading.Event()
+
+    def wedged_step(ps):
+        entered.set()
+        release.wait(5.0)
+        return ps
+
+    cb = ContinuousBatcher(wedged_step, PROF, device="host",
+                           batch_size=1, max_wait_s=0.0,
+                           idle_wait_s=0.01).start()
+    cb.submit(Request(0, 0))
+    assert entered.wait(2.0)         # worker is inside the wedged step
+    with pytest.raises(TimeoutError, match="did not join"):
+        cb.stop(drain=False, timeout=0.2)
+    release.set()
+    cb.stop(drain=False, timeout=5.0)    # retry joins cleanly
+    assert cb.result(0, timeout=1.0) == 0
+
+
 def test_batcher_stop_drains_inline_when_never_started():
     """stop(drain=True) with no worker thread must serve the queue on
     the calling thread rather than orphan admitted requests."""
@@ -561,6 +585,40 @@ def test_stop_without_drain_fails_pending_cleanly(tmp_path, serve_zoo,
         except RuntimeError:
             outcomes["failed"] += 1
     assert outcomes["served"] + outcomes["failed"] == 6
+
+
+def test_server_stop_surfaces_stuck_lane(tmp_path, serve_zoo, table,
+                                         sample):
+    """A lane worker wedged in a backend call must not hang stop():
+    the join times out and the server raises RuntimeError naming the
+    stuck lane, with pending results marked undeliverable."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess, max_wait_s=0.01,
+                            idle_wait_s=0.05).start()
+    release = threading.Event()
+    entered = threading.Event()
+    backend = sess.backends["host"]        # numpy pool: every annotation
+    orig = backend.run_infer               # shares this instance
+
+    def wedged_run_infer(spec, batch):
+        entered.set()
+        release.wait(10.0)
+        return orig(spec, batch)
+
+    backend.run_infer = wedged_run_infer
+    try:
+        server.submit("PREDICT emb USING TASK sent FROM reviews")
+        assert entered.wait(5.0)           # worker is inside the backend
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="did not join") as ei:
+            server.stop(drain=False, timeout=0.2)
+        assert time.perf_counter() - t0 < 5.0   # bounded, not hung
+        # the error names which lane is wedged
+        assert any(k in str(ei.value) for k in server._lanes)
+    finally:
+        release.set()
+        backend.run_infer = orig
 
 
 def test_head_mode_task_served_warm_keeps_trunk_on_disk(tmp_path,

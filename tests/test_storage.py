@@ -270,3 +270,90 @@ def test_api_registry_retry_cache_quota():
     reg.invoke("tiny", np.ones(2), rng)
     with pytest.raises(RuntimeError, match="quota"):
         reg.invoke("tiny", np.ones(4), rng)
+
+
+# -- bounded layer-tensor cache (LRU over a byte capacity) -----------------
+
+def test_layer_cache_lru_eviction_and_counters(tmp_path):
+    """The cross-model tensor cache evicts least-recently-used entries
+    once over its byte capacity, and StoreStats accounts for it."""
+    rng = np.random.default_rng(0)
+    layer = rng.standard_normal((64, 64)).astype(np.float32)  # 16 KiB
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat,
+                        cache_capacity_bytes=3 * layer.nbytes + 1024)
+    for i in range(5):
+        ds.save(f"m{i}", {"arch": "mlp"}, {"trunk": {"W": layer + i}})
+        ds.load(f"m{i}")
+    assert ds.stats.cache_bytes <= ds.cache_capacity_bytes
+    assert ds.stats.cache_evictions >= 2
+    assert ds.stats.cache_evicted_bytes >= 2 * layer.nbytes
+    # m0/m1 were evicted (LRU): reloading them is a disk read, not a hit
+    h0 = ds.stats.cache_hits
+    ds.load("m0")
+    assert ds.stats.cache_hits == h0
+    # the freshest entry is still resident
+    ds.load("m4")
+    assert ds.stats.cache_hits == h0 + 1
+
+
+def test_layer_cache_lru_recency_refresh(tmp_path):
+    """A cache hit freshens the entry: the hit survivor outlives an
+    older untouched entry when capacity pressure evicts."""
+    rng = np.random.default_rng(1)
+    layer = rng.standard_normal((32, 32)).astype(np.float32)
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat,
+                        cache_capacity_bytes=2 * layer.nbytes + 512)
+    ds.save("a", {"arch": "m"}, {"w": layer})
+    ds.save("b", {"arch": "m"}, {"w": layer + 1})
+    ds.load("a")
+    ds.load("b")
+    ds.load("a")                     # freshen a: b is now the LRU victim
+    ds.save("c", {"arch": "m"}, {"w": layer + 2})
+    ds.load("c")                     # evicts b, not a
+    h0 = ds.stats.cache_hits
+    ds.load("a")
+    assert ds.stats.cache_hits == h0 + 1
+    ds.load("b")                     # miss: was evicted
+    assert ds.stats.cache_hits == h0 + 1
+
+
+def test_delta_fleet_cache_stays_under_cap(tmp_path):
+    """K=16 fine-tune fleet: composing every variant against one base
+    keeps the tensor cache bounded by the configured capacity."""
+    rng = np.random.default_rng(2)
+    K = 16
+    base_trunk = rng.standard_normal((128, 64)).astype(np.float32)  # 32 KiB
+    head = rng.standard_normal(64).astype(np.float32)
+    cap = 6 * base_trunk.nbytes
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat, cache_capacity_bytes=cap)
+    ds.save("base", {"arch": "m"}, {"trunk": {"W": base_trunk},
+                                    "head": {"w": head}})
+    for k in range(K):
+        ds.save(f"ft{k}", {"arch": "m"},
+                {"trunk": {"W": base_trunk + 0.01 * (k + 1)},
+                 "head": {"w": head}}, base_model="base")
+    for k in range(K):               # resolve the whole fleet
+        ds.load(f"ft{k}")
+    assert ds.stats.cache_bytes <= cap
+    assert ds.stats.cache_evictions > 0
+    # accounting identity: resident + evicted == everything ever admitted
+    assert ds.stats.cache_bytes + ds.stats.cache_evicted_bytes > 0
+    # correctness under eviction: a composed variant re-reads exactly
+    _, flat = ds.load("ft3")
+    np.testing.assert_allclose(flat["trunk/W"], base_trunk + 0.04,
+                               rtol=0, atol=1e-6)
+
+
+def test_cache_capacity_zero_disables_caching(tmp_path):
+    rng = np.random.default_rng(3)
+    layer = rng.standard_normal((16, 16)).astype(np.float32)
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat, cache_capacity_bytes=0)
+    ds.save("m", {"arch": "m"}, {"w": layer})
+    ds.load("m")
+    ds.load("m")
+    assert ds.stats.cache_hits == 0
+    assert ds.stats.cache_bytes == 0
