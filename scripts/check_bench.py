@@ -37,9 +37,40 @@ import argparse
 import json
 import sys
 from pathlib import Path
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, NamedTuple, Optional, Tuple
 
 DEFAULT_THRESHOLD = 0.25
+
+
+class Violation(NamedTuple):
+    """One gate violation; every violation found is collected and
+    reported in a single metric/actual/limit table before the non-zero
+    exit (a run never stops at the first failure)."""
+    artifact: str
+    metric: str
+    rule: str                        # '>= floor' | '<= ceiling' | ...
+    actual: Optional[float]          # None = metric missing from fresh
+    limit: Optional[float]
+    baseline: Optional[float]
+
+    def row(self) -> Tuple[str, str, str, str, str, str]:
+        fmt = (lambda v: "missing" if v is None else f"{v:,.2f}")
+        return (self.artifact, self.metric, self.rule, fmt(self.actual),
+                fmt(self.limit), fmt(self.baseline))
+
+
+_TABLE_HEADER = ("artifact", "metric", "rule", "actual", "limit",
+                 "baseline")
+
+
+def render_violations(violations: List["Violation"]) -> str:
+    """Aligned table of every violation (written to stderr on failure)."""
+    rows = [_TABLE_HEADER] + [v.row() for v in violations]
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+             for r in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
 
 # higher-is-better throughput metrics (suffix match on the key). The
 # speedup_* ratios are deliberately NOT gated: a ratio of two noisy
@@ -73,56 +104,50 @@ def _lookup(tree: dict, path: str):
 
 
 def check_pair(fresh: dict, baseline: dict, threshold: float,
-               label: str) -> List[str]:
-    failures: List[str] = []
+               label: str) -> List[Violation]:
+    violations: List[Violation] = []
     for path, base_val in _walk(baseline):
         key = path.rsplit(".", 1)[-1]
         fresh_val = _lookup(fresh, path)
         if key.endswith(_SKIP):
             continue
         if key.endswith(_HIGHER_BETTER):
-            if fresh_val is None:
-                failures.append(f"{label}: metric {path} missing from "
-                                "fresh run")
-                continue
             floor = base_val * (1.0 - threshold)
+            if fresh_val is None:
+                violations.append(Violation(label, path, ">= floor",
+                                            None, floor, base_val))
+                continue
             status = "OK" if fresh_val >= floor else "FAIL"
             print(f"[{status}] {label}:{path} fresh={fresh_val:.1f} "
                   f"baseline={base_val:.1f} floor={floor:.1f}")
             if fresh_val < floor:
-                failures.append(
-                    f"{label}: {path} regressed "
-                    f"{fresh_val:.1f} < {floor:.1f} "
-                    f"(baseline {base_val:.1f}, threshold "
-                    f"{threshold:.0%})")
+                violations.append(Violation(label, path, ">= floor",
+                                            fresh_val, floor, base_val))
         elif key.endswith(_LOWER_BETTER):
-            if fresh_val is None:
-                failures.append(f"{label}: metric {path} missing from "
-                                "fresh run")
-                continue
             ceil = base_val * (1.0 + threshold)
+            if fresh_val is None:
+                violations.append(Violation(label, path, "<= ceiling",
+                                            None, ceil, base_val))
+                continue
             status = "OK" if fresh_val <= ceil else "FAIL"
             print(f"[{status}] {label}:{path} fresh={fresh_val:.2f} "
                   f"baseline={base_val:.2f} ceiling={ceil:.2f}")
             if fresh_val > ceil:
-                failures.append(
-                    f"{label}: {path} regressed "
-                    f"{fresh_val:.2f} > {ceil:.2f} "
-                    f"(baseline {base_val:.2f}, threshold "
-                    f"{threshold:.0%})")
+                violations.append(Violation(label, path, "<= ceiling",
+                                            fresh_val, ceil, base_val))
         elif key == "compile_count":
             if fresh_val is None:
-                failures.append(f"{label}: metric {path} missing from "
-                                "fresh run")
+                violations.append(Violation(label, path, "no growth",
+                                            None, base_val, base_val))
                 continue
             status = "OK" if fresh_val <= base_val else "FAIL"
             print(f"[{status}] {label}:{path} fresh={fresh_val:.0f} "
                   f"baseline={base_val:.0f} (must not grow)")
             if fresh_val > base_val:
-                failures.append(
-                    f"{label}: {path} grew {fresh_val:.0f} > "
-                    f"{base_val:.0f} — shape bucketing regressed")
-    return failures
+                violations.append(Violation(label, path, "no growth",
+                                            fresh_val, base_val,
+                                            base_val))
+    return violations
 
 
 def main(argv=None) -> int:
@@ -135,7 +160,7 @@ def main(argv=None) -> int:
                     help="allowed fractional rows/s regression "
                          "(default 0.25)")
     args = ap.parse_args(argv)
-    failures: List[str] = []
+    violations: List[Violation] = []
     for pair in args.pair:
         fresh_path, _, base_path = pair.partition("=")
         if not base_path:
@@ -144,15 +169,16 @@ def main(argv=None) -> int:
         try:
             fresh = json.loads(Path(fresh_path).read_text())
         except FileNotFoundError:
-            failures.append(f"{label}: fresh artifact {fresh_path} "
-                            "not found")
+            violations.append(Violation(label, "(artifact)",
+                                        "file exists", None, None, None))
             continue
         baseline = json.loads(Path(base_path).read_text())
-        failures.extend(check_pair(fresh, baseline, args.threshold, label))
-    if failures:
-        print("\nbench-regression gate FAILED:", file=sys.stderr)
-        for f in failures:
-            print(f"  - {f}", file=sys.stderr)
+        violations.extend(check_pair(fresh, baseline, args.threshold,
+                                     label))
+    if violations:
+        print(f"\nbench-regression gate FAILED "
+              f"({len(violations)} violation(s)):\n", file=sys.stderr)
+        print(render_violations(violations), file=sys.stderr)
         return 1
     print("\nbench-regression gate passed")
     return 0

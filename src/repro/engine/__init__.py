@@ -7,6 +7,8 @@ from repro.engine.plan import (CompileContext, LogicalPlan, PlanNode,
                                annotate_plan, compile_plan, insert_embeds,
                                optimize, push_down_filters)
 from repro.engine.serve import (MorphingServer, ServeResult, ServerStats)
+from repro.pipeline.admission import (AdmissionPolicy, CircuitOpen,
+                                      Rejected, RequestError)
 from repro.engine.session import (MorphingSession, QueryReport, QueryResult,
                                   ResolvedModel)
 from repro.engine.sql import (CreateTaskStmt, QueryStmt, SelectItem,
@@ -16,6 +18,7 @@ __all__ = [
     "CompileContext", "LogicalPlan", "PlanNode", "annotate_plan",
     "compile_plan", "insert_embeds", "optimize", "push_down_filters",
     "MorphingServer", "ServeResult", "ServerStats",
+    "AdmissionPolicy", "CircuitOpen", "Rejected", "RequestError",
     "MorphingSession", "QueryReport", "QueryResult", "ResolvedModel",
     "CreateTaskStmt", "QueryStmt", "SelectItem", "TaskCall", "parse",
     "tokenize",

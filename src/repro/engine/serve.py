@@ -67,6 +67,8 @@ from repro.core.zoo import adapt_input_width
 from repro.engine.session import MorphingSession
 from repro.engine.sql import QueryStmt, parse
 from repro.engine.plan import _make_pred
+from repro.pipeline.admission import (AdmissionPolicy, CircuitOpen,
+                                      PRIORITIES, validate_priority)
 from repro.pipeline.backend import (ExecutionBackend, InferSpec,
                                     default_host_backend)
 from repro.pipeline.batcher import BatcherStats, ContinuousBatcher, Request
@@ -127,6 +129,25 @@ class ServerStats:
     delta_loaded_bytes: int = 0      # disk bytes their resolutions read
     #                                # (≈ K·delta when the base is warm)
     delta_stored_bytes: int = 0      # their delta layers' bytes on disk
+    # admission / robustness layer (populated when the server carries an
+    # AdmissionPolicy; zeros otherwise) — docs/serving.md "Admission &
+    # SLOs" documents every field
+    rejected: int = 0                # submits pushed back (Rejected)
+    rejected_by_priority: Dict[str, int] = field(default_factory=dict)
+    retries: int = 0                 # transient-failure batch retries
+    failed_batches: int = 0          # batches that failed after retries
+    deadline_misses: int = 0         # served past their deadline_ms
+    deadlines_admitted: int = 0      # requests admitted with a deadline
+    breaker_trips: int = 0           # lane breakers tripped open
+    breaker_resets: int = 0          # supervisor breaker resets
+    breaker_open_lanes: List[str] = field(default_factory=list)
+    p50_latency_s_by_priority: Dict[str, float] = field(
+        default_factory=dict)
+    p95_latency_s_by_priority: Dict[str, float] = field(
+        default_factory=dict)
+    batch_rows_by_lane: Dict[str, int] = field(default_factory=dict)
+    budget_shrinks: int = 0          # dynamic-budget shrink events
+    budget_grows: int = 0            # dynamic-budget regrow events
 
     @property
     def rows_per_second(self) -> float:
@@ -201,7 +222,8 @@ class MorphingServer:
                  max_wait_s: float = 0.002, idle_wait_s: float = 0.05,
                  mem_cap_bytes: float = 2e9, nrows_hint: int = 2048,
                  share_lanes: bool = True, devices: Optional[int] = None,
-                 stop_timeout_s: float = 30.0, **session_kw):
+                 stop_timeout_s: float = 30.0,
+                 policy: Optional[AdmissionPolicy] = None, **session_kw):
         if session is None:
             if devices is not None:
                 session_kw.setdefault("device_count", devices)
@@ -223,6 +245,9 @@ class MorphingServer:
         self.nrows_hint = nrows_hint
         self.share_lanes = share_lanes
         self.stop_timeout_s = stop_timeout_s
+        # admission policy is applied to every lane; None keeps the
+        # legacy unbounded FIFO lanes
+        self.policy = policy
         self._lanes: Dict[str, _Lane] = {}
         self._lane_of_task: Dict[str, _Lane] = {}
         self._task_of: Dict[int, str] = {}
@@ -254,10 +279,14 @@ class MorphingServer:
         workers stay daemon threads; a later ``stop()`` retries the
         join."""
         with self._lock:
-            if not self._running:
-                return
+            was_running = self._running
             self._running = False
             lanes = list(self._lanes.values())
+        if not was_running and all(lane.batcher._thread is None
+                                   for lane in lanes):
+            return          # nothing left to join: idempotent stop
+        # not-running but with live workers = a prior stop() timed out
+        # on a wedged lane; fall through so this call retries the joins
         timeout = self.stop_timeout_s if timeout is None else timeout
         stuck: List[str] = []
         for lane in lanes:
@@ -391,7 +420,8 @@ class MorphingServer:
             step = self._share_step(lane, backend)
         lane.batcher = ContinuousBatcher(
             step, batch_size=batch_rows, size_of=lambda p: len(p[1]),
-            max_wait_s=self.max_wait_s, idle_wait_s=self.idle_wait_s)
+            max_wait_s=self.max_wait_s, idle_wait_s=self.idle_wait_s,
+            name=key, policy=self.policy)
         return lane
 
     # -- lane execution ----------------------------------------------------
@@ -476,12 +506,23 @@ class MorphingServer:
                 self.session.resolve_task(name, X, y, **kw)
 
     def submit(self, sql: str,
-               sample: Optional[Tuple[np.ndarray, np.ndarray]] = None
-               ) -> int:
+               sample: Optional[Tuple[np.ndarray, np.ndarray]] = None, *,
+               priority: str = "batch",
+               deadline_ms: Optional[float] = None) -> int:
         """Admit one PREDICT statement; returns its request id. The rows
         the statement selects are snapshotted at admission (the window
         the request observed) and coalesced with other requests whose
-        tasks resolve to the same trunk."""
+        tasks resolve to the same trunk.
+
+        With an :class:`AdmissionPolicy` on the server, ``priority``
+        (``interactive``/``batch``/``best_effort``) picks the lane queue
+        and drain weight, ``deadline_ms`` feeds the deadline-aware row
+        budget and the deadline-miss counter, and this call raises
+        :class:`Rejected` under backpressure or :class:`CircuitOpen`
+        while the lane's breaker is open. The supervisor lives here: a
+        tripped breaker past its cooldown is reset on the next submit
+        (the lane "restarts" and the request is admitted)."""
+        validate_priority(priority)
         task, col, table, preds = self._parse_predict(sql)
         if not self._running:
             raise RuntimeError(
@@ -492,11 +533,18 @@ class MorphingServer:
                     f"task {task} unresolved and no sample given")
             self.resolve_task(task, *sample)
         lane = self._lane_for(task)
+        # supervisor: an open breaker whose cooldown elapsed is closed
+        # here, so the first post-cooldown submit restarts the lane
+        # instead of requiring an operator action
+        lane.batcher.reset_breaker()
         X = self._rows_for(table, col, preds)
         req_id = next(self._ids)
         # bookkeeping only after a successful admission (submit raises
         # when racing a stop()); counter writes go under the lane lock
-        lane.batcher.submit(Request(req_id, (task, X)))
+        lane.batcher.submit(Request(
+            req_id, (task, X), priority=priority,
+            deadline_s=(deadline_ms / 1000.0
+                        if deadline_ms is not None else None)))
         self._task_of[req_id] = task
         with lane.lock:
             lane.requests_by_task[task] = \
@@ -528,9 +576,13 @@ class MorphingServer:
 
     def predict(self, sql: str,
                 sample: Optional[Tuple[np.ndarray, np.ndarray]] = None,
-                timeout: Optional[float] = None) -> ServeResult:
+                timeout: Optional[float] = None, *,
+                priority: str = "batch",
+                deadline_ms: Optional[float] = None) -> ServeResult:
         """submit + result convenience for a single caller thread."""
-        return self.result(self.submit(sql, sample=sample),
+        return self.result(self.submit(sql, sample=sample,
+                                       priority=priority,
+                                       deadline_ms=deadline_ms),
                            timeout=timeout)
 
     # -- telemetry ---------------------------------------------------------
@@ -538,6 +590,7 @@ class MorphingServer:
         st = ServerStats()
         st.devices = self.devices
         lat: List[float] = []
+        lat_by_prio: Dict[str, List[float]] = {p: [] for p in PRIORITIES}
         coalesced: List[int] = []
         embed_seconds = 0.0
         with self._lock:
@@ -545,6 +598,25 @@ class MorphingServer:
         st.lanes = len(lanes)
         for lane in lanes:
             lane_lat, lane_sizes = lane.batcher.telemetry()
+            for p, samples in lane.batcher.telemetry_by_priority().items():
+                lat_by_prio[p].extend(samples)
+            h = lane.batcher.health()
+            st.rejected += h["rejected"]
+            for p, c in h["rejected_by_priority"].items():
+                if c:
+                    st.rejected_by_priority[p] = \
+                        st.rejected_by_priority.get(p, 0) + c
+            st.retries += h["retries"]
+            st.failed_batches += h["failed_batches"]
+            st.deadline_misses += h["deadline_misses"]
+            st.deadlines_admitted += h["deadlines_admitted"]
+            st.breaker_trips += h["breaker_trips"]
+            st.breaker_resets += h["breaker_resets"]
+            if h["breaker_open"]:
+                st.breaker_open_lanes.append(lane.key)
+            st.batch_rows_by_lane[lane.key] = h["batch_rows"]
+            st.budget_shrinks += h["budget_shrinks"]
+            st.budget_grows += h["budget_grows"]
             with lane.lock:
                 served_tasks = list(lane.requests_by_task.items())
                 heads = list(lane.heads.values())
@@ -583,6 +655,12 @@ class MorphingServer:
             st.p50_latency_s = float(np.percentile(lat, 50))
             st.p95_latency_s = float(np.percentile(lat, 95))
             st.max_latency_s = float(np.max(lat))
+        for p, samples in lat_by_prio.items():
+            if samples:
+                st.p50_latency_s_by_priority[p] = \
+                    float(np.percentile(samples, 50))
+                st.p95_latency_s_by_priority[p] = \
+                    float(np.percentile(samples, 95))
         # bytes are scoped to tasks actually served through a lane — a
         # shared session's analytics-only resolutions don't belong in
         # serving telemetry
@@ -601,6 +679,14 @@ class MorphingServer:
                         st.delta_loaded_bytes += rm.loaded_bytes
                         st.delta_stored_bytes += rm.delta_bytes
         return st
+
+    def health(self) -> Dict[str, Dict]:
+        """Per-lane robustness snapshot (queue depths, rejections,
+        retries, breaker state, current dynamic row budget) keyed by
+        lane. The fleet aggregate lives on :meth:`stats`."""
+        with self._lock:
+            lanes = list(self._lanes.values())
+        return {lane.key: lane.batcher.health() for lane in lanes}
 
     def reset_telemetry(self) -> None:
         """Re-base every telemetry window: latency/batch-size deques,

@@ -1,13 +1,17 @@
+from repro.pipeline.admission import (AdmissionPolicy, CircuitOpen,
+                                      LaneBreaker, Rejected, RequestError,
+                                      BATCH, BEST_EFFORT, INTERACTIVE,
+                                      PRIORITIES, validate_priority)
 from repro.pipeline.backend import (ExecutionBackend, InferSpec, JaxBackend,
                                     NumpyBackend, StagedModel,
                                     default_host_backend, make_backends)
 from repro.pipeline.batcher import (BatcherStats, ContinuousBatcher, Request,
                                     WindowBatcher, run_batched)
-from repro.pipeline.cost import (DEFAULT_HW, HardwareProfile, OpProfile,
-                                 batch_cost, calibrate, choose_batch_size,
-                                 choose_device, delta_staged_profile,
-                                 op_cost, place_dag, profile_for_model,
-                                 split_profile)
+from repro.pipeline.cost import (DEFAULT_HW, DynamicBudget, HardwareProfile,
+                                 OpProfile, batch_cost, calibrate,
+                                 choose_batch_size, choose_device,
+                                 delta_staged_profile, op_cost, place_dag,
+                                 profile_for_model, split_profile)
 from repro.pipeline.dag import Dag, Edge, Node
 from repro.pipeline.operators import (Batch, aggregate, batch_len,
                                       concat_batches, filter_op, groupby_agg,
@@ -18,6 +22,9 @@ from repro.pipeline.share import (ShareStats, VectorShareCache, fingerprint,
                                   fingerprint_rows, simd_normalize_embed)
 
 __all__ = [
+    "AdmissionPolicy", "CircuitOpen", "LaneBreaker", "Rejected",
+    "RequestError", "BATCH", "BEST_EFFORT", "INTERACTIVE", "PRIORITIES",
+    "validate_priority", "DynamicBudget",
     "ExecutionBackend", "InferSpec", "JaxBackend", "NumpyBackend",
     "StagedModel", "default_host_backend", "make_backends",
     "BatcherStats", "ContinuousBatcher", "Request", "WindowBatcher",

@@ -68,6 +68,10 @@ class ExecutionBackend:
         # same node: accumulate under a lock (same race class as
         # ExecStats in the executor)
         self._stats_lock = threading.Lock()
+        # chaos hook (duck-typed; see training.fault.FaultInjector):
+        # fires at the top of run_infer when set, so tests and the
+        # overload bench can inject errors/stalls without a flaky device
+        self.fault_injector: Optional[Any] = None
 
     # -- staging ----------------------------------------------------------
     def stage(self, version: str, zoo_model) -> Any:
@@ -86,6 +90,9 @@ class ExecutionBackend:
 
     def run_infer(self, spec: InferSpec, batch: Dict[str, np.ndarray]
                   ) -> Dict[str, np.ndarray]:
+        fi = self.fault_injector
+        if fi is not None:
+            fi.on_infer(spec, len(batch.get(spec.col, ())))
         res = dict(batch)
         X = batch[spec.col]
         if spec.kind == "embed":
@@ -515,6 +522,12 @@ class BackendPool(Dict[str, ExecutionBackend]):
 
     def distinct(self) -> List[ExecutionBackend]:
         return list({id(b): b for b in self.values()}.values())
+
+    def set_fault_injector(self, injector: Optional[Any]) -> None:
+        """Thread a chaos hook (``training.fault.FaultInjector`` or
+        ``None`` to clear) through every distinct backend in the pool."""
+        for b in self.distinct():
+            b.fault_injector = injector
 
 
 def _mesh_jax_backend(device_count: int) -> Tuple[Optional[JaxBackend],

@@ -14,10 +14,19 @@ either as a one-shot loop (``run(total)``) or as a long-lived service
 thread coalesces queued requests into batches and publishes results
 through a condition variable — the serving-path sibling of the
 window-function batcher.
+
+With an :class:`~repro.pipeline.admission.AdmissionPolicy` attached the
+batcher is the production-hardened serving lane: priority-class queues
+with depth caps and backpressure (typed ``Rejected``), weighted lane
+draining, deadline-aware dynamic Eq. 11 row budgets
+(:class:`~repro.pipeline.cost.DynamicBudget`), capped-backoff retries
+for transient step failures, and a circuit breaker that sheds traffic
+after repeated batch failures until a supervisor resets it. Without a
+policy it behaves exactly as before: one FIFO, unbounded admission,
+no retries, static budget.
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
 from collections import deque
@@ -27,7 +36,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.pipeline.cost import OpProfile, choose_batch_size
+from repro.pipeline.admission import (AdmissionPolicy, CircuitOpen,
+                                      LaneBreaker, Rejected, RequestError,
+                                      PRIORITIES, validate_priority)
+from repro.pipeline.cost import DynamicBudget, OpProfile, choose_batch_size
 
 
 @dataclass
@@ -113,6 +125,12 @@ class Request:
     req_id: int
     payload: Any
     arrival: float = field(default_factory=time.time)
+    # SLO dimensions (ignored unless the batcher carries an
+    # AdmissionPolicy): priority class for weighted draining + caps, and
+    # an optional completion deadline relative to arrival (seconds) that
+    # feeds the dynamic row budget and the deadline-miss counter
+    priority: str = "batch"
+    deadline_s: Optional[float] = None
 
 
 class _Failure:
@@ -142,6 +160,13 @@ class ContinuousBatcher:
     batches match the cost-model-sized row budget rather than a request
     count. Duplicate ``req_id`` submissions raise (a silent overwrite
     would drop one requester's result).
+
+    ``policy`` (an :class:`AdmissionPolicy`) turns on the production
+    hardening: queue-depth caps with reject/block backpressure, weighted
+    priority draining, the deadline-aware :class:`DynamicBudget` in
+    place of the static row budget, retry-with-backoff on step failures,
+    and the lane circuit breaker. ``name`` labels this lane in every
+    typed error so operators can tell *which* lane pushed back.
     """
 
     def __init__(self, step_fn: Callable[[List[Any]], List[Any]],
@@ -151,7 +176,9 @@ class ContinuousBatcher:
                  batch_size: Optional[int] = None,
                  size_of: Optional[Callable[[Any], int]] = None,
                  hw: Optional[Dict[str, Any]] = None,
-                 telemetry_window: int = 10000):
+                 telemetry_window: int = 10000,
+                 name: str = "",
+                 policy: Optional[AdmissionPolicy] = None):
         self.step_fn = step_fn
         if batch_size is not None:
             self.batch_size = max(1, int(batch_size))
@@ -164,7 +191,16 @@ class ContinuousBatcher:
         self.max_wait_s = max_wait_s
         self.idle_wait_s = idle_wait_s
         self.size_of = size_of or (lambda _p: 1)
-        self._q: "queue.Queue[Request]" = queue.Queue()
+        self.name = name
+        self.policy = policy
+        # admission state: per-priority FIFO deques drained by weighted
+        # round-robin; all guarded by the one condition variable
+        self._queues: Dict[str, "deque[Request]"] = {
+            p: deque() for p in PRIORITIES}
+        self._credits: Dict[str, int] = {p: 0 for p in PRIORITIES}
+        self._queued_units = 0
+        self._queued_units_by: Dict[str, int] = {p: 0 for p in PRIORITIES}
+        self._queued_reqs = 0
         self._cv = threading.Condition()
         self._results: Dict[int, Any] = {}
         self._latency_of: Dict[int, float] = {}
@@ -172,73 +208,272 @@ class ContinuousBatcher:
         self._pending = 0                    # submitted but not yet served
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # SLO machinery (active only with a policy): dynamic Eq. 11
+        # budget + the windowed tightest admitted deadline it tracks,
+        # and the lane circuit breaker
+        self.budget: Optional[DynamicBudget] = None
+        self.breaker: Optional[LaneBreaker] = None
+        if policy is not None:
+            self.budget = DynamicBudget(
+                base_rows=self.batch_size,
+                min_rows=policy.min_batch_rows,
+                shrink_at=policy.shrink_at, grow_at=policy.grow_at)
+            if policy.breaker_threshold > 0:
+                self.breaker = LaneBreaker(
+                    threshold=policy.breaker_threshold,
+                    cooldown_s=policy.breaker_cooldown_s)
+        self._deadline_window: "deque[float]" = deque(maxlen=256)
+        # robustness counters (read via health())
+        self.rejected = 0
+        self.rejected_by_priority: Dict[str, int] = {
+            p: 0 for p in PRIORITIES}
+        self.retries = 0
+        self.failed_batches = 0
+        self.deadline_misses = 0
+        self.deadlines_admitted = 0
+        self.breaker_resets = 0
         # telemetry is windowed so a long-running service doesn't grow
         # without bound; per-request state is evicted by result()
         self.latencies: "deque[float]" = deque(maxlen=telemetry_window)
         self.batch_sizes: "deque[int]" = deque(maxlen=telemetry_window)
+        self.lat_by_priority: Dict[str, "deque[float]"] = {
+            p: deque(maxlen=telemetry_window) for p in PRIORITIES}
+
+    def _label(self) -> str:
+        return f"lane {self.name!r}" if self.name else "batcher"
 
     # -- admission ---------------------------------------------------------
+    def _has_room_locked(self, priority: str, units: int) -> bool:
+        if self.policy is None:
+            return True
+        pol = self.policy
+        if self._queued_units + units > pol.max_queue_rows:
+            return False
+        return (self._queued_units_by[priority] + units
+                <= pol.cap_of(priority))
+
+    def _reject_locked(self, req: Request, units: int,
+                       reason: str) -> None:
+        self.rejected += 1
+        self.rejected_by_priority[req.priority] += 1
+        cap = (self.policy.cap_of(req.priority) if self.policy else 0)
+        raise Rejected(
+            f"{self._label()} rejected req_id {req.req_id!r} "
+            f"({req.priority}, {units} units): {reason} "
+            f"(queued {self._queued_units} units, cap {cap})",
+            lane=self.name, priority=req.priority,
+            queued_units=self._queued_units, cap=cap, reason=reason)
+
     def submit(self, req: Request) -> int:
+        """Admit one request, or push back.
+
+        Raises ``RuntimeError`` after ``stop()`` (the worker is gone —
+        enqueueing would orphan the request), :class:`CircuitOpen` while
+        the lane breaker is open, and :class:`Rejected` when the queue
+        caps push back (immediately under the ``reject`` policy, after
+        ``block_timeout_s`` of waiting for drain under ``block``)."""
+        validate_priority(req.priority)
+        units = self.size_of(req.payload)
         with self._cv:
             if req.req_id in self._submitted:
                 raise ValueError(f"duplicate req_id {req.req_id!r}")
-            if self._stop.is_set():
-                raise RuntimeError("batcher is stopped")
+            self._check_stopped_locked(req)
+            if not self._has_room_locked(req.priority, units):
+                if self.policy is not None and self.policy.mode == "block":
+                    ok = self._cv.wait_for(
+                        lambda: (self._stop.is_set()
+                                 or (self.breaker is not None
+                                     and self.breaker.open)
+                                 or self._has_room_locked(req.priority,
+                                                          units)),
+                        timeout=self.policy.block_timeout_s)
+                    self._check_stopped_locked(req)
+                    if not ok or not self._has_room_locked(req.priority,
+                                                           units):
+                        self._reject_locked(req, units, "block_timeout")
+                else:
+                    self._reject_locked(req, units, "queue_full")
+            if req.req_id in self._submitted:   # re-check after blocking
+                raise ValueError(f"duplicate req_id {req.req_id!r}")
             self._submitted.add(req.req_id)
             self._pending += 1
             # enqueue under the cv so the stop check and the put are
             # atomic w.r.t. stop(drain=False)'s queue drain — a request
             # can be admitted or rejected, never accepted-then-orphaned
-            self._q.put(req)
+            self._queues[req.priority].append(req)
+            self._queued_units += units
+            self._queued_units_by[req.priority] += units
+            self._queued_reqs += 1
+            if req.deadline_s is not None and req.deadline_s > 0:
+                self._deadline_window.append(float(req.deadline_s))
+                self.deadlines_admitted += 1
+            self._cv.notify_all()
         return req.req_id
+
+    def _check_stopped_locked(self, req: Request) -> None:
+        if self._stop.is_set():
+            raise RuntimeError(
+                f"{self._label()} stopped: no worker will serve "
+                f"req_id {req.req_id!r}")
+        if self.breaker is not None and self.breaker.open:
+            raise CircuitOpen(
+                f"{self._label()} circuit breaker open after "
+                f"{self.breaker.failures} consecutive batch failures; "
+                "shedding until the supervisor resets it",
+                lane=self.name, priority=req.priority,
+                failures=self.breaker.failures)
+
+    # -- weighted draining -------------------------------------------------
+    def _pop_locked(self) -> Request:
+        """Pop the next request under weighted round-robin: each class
+        spends ``weight`` credits per cycle while others wait, so
+        interactive traffic drains first without starving best-effort.
+        Caller holds the cv and has checked a request is queued."""
+        while True:
+            for p in PRIORITIES:
+                if self._queues[p] and self._credits[p] > 0:
+                    self._credits[p] -= 1
+                    req = self._queues[p].popleft()
+                    units = self.size_of(req.payload)
+                    self._queued_units -= units
+                    self._queued_units_by[p] -= units
+                    self._queued_reqs -= 1
+                    return req
+            # every queued class is out of credits: start a new cycle
+            for p in PRIORITIES:
+                self._credits[p] = (self.policy.weight_of(p)
+                                    if self.policy else
+                                    {"interactive": 8, "batch": 3,
+                                     "best_effort": 1}[p])
+
+    def _target_units(self) -> int:
+        return self.budget.current if self.budget is not None \
+            else self.batch_size
 
     def _collect(self, limit: Optional[int] = None) -> List[Request]:
         # Block on the first request (bounded by idle_wait_s) so an empty
         # queue parks the thread in the OS wait instead of busy-spinning.
-        try:
-            batch = [self._q.get(timeout=self.idle_wait_s)]
-        except queue.Empty:
-            return []
-        units = self.size_of(batch[0].payload)
-        deadline = time.time() + self.max_wait_s
-        while units < self.batch_size and (limit is None
-                                           or len(batch) < limit):
-            timeout = deadline - time.time()
-            if timeout <= 0:
-                break
-            try:
-                req = self._q.get(timeout=timeout)
-            except queue.Empty:
-                break
-            batch.append(req)
-            units += self.size_of(req.payload)
+        with self._cv:
+            self._cv.wait_for(
+                lambda: self._queued_reqs > 0 or self._stop.is_set(),
+                timeout=self.idle_wait_s)
+            if self._queued_reqs == 0:
+                return []
+            batch = [self._pop_locked()]
+            units = self.size_of(batch[0].payload)
+            target = self._target_units()
+            deadline = time.time() + self.max_wait_s
+            while units < target and (limit is None
+                                      or len(batch) < limit):
+                timeout = deadline - time.time()
+                if timeout <= 0:
+                    break
+                if self._queued_reqs == 0:
+                    self._cv.wait_for(lambda: self._queued_reqs > 0
+                                      or self._stop.is_set(),
+                                      timeout=timeout)
+                if self._queued_reqs == 0:
+                    break
+                req = self._pop_locked()
+                batch.append(req)
+                units += self.size_of(req.payload)
+            # popping freed queue room: wake block-mode submitters
+            self._cv.notify_all()
         return batch
 
     # -- serving -----------------------------------------------------------
+    def _run_step(self, batch: List[Request]
+                  ) -> Tuple[List[Any], Optional[Exception], int]:
+        """Execute the step with the policy's retry budget. Returns
+        (outputs, final error or None, attempts made)."""
+        payloads = [r.payload for r in batch]
+        retry_limit = self.policy.retry_limit if self.policy else 0
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                outs: List[Any] = list(self.step_fn(payloads))
+                if len(outs) != len(batch):
+                    raise RuntimeError(
+                        f"step_fn returned {len(outs)} results for "
+                        f"{len(batch)} requests")
+                return outs, None, attempt
+            except Exception as e:      # surfaced via result() / run()
+                if attempt > retry_limit:
+                    return [], e, attempt
+                with self._cv:
+                    self.retries += 1
+                # capped exponential backoff: transient backend hiccups
+                # (a preempted device, a flaky remote) get a beat to
+                # clear before the batch retries
+                time.sleep(self.policy.backoff_s(attempt))
+
     def _serve(self, batch: List[Request]) -> Optional[Exception]:
-        """Run one step and publish its results; a step error is stored
-        per request (surfaced by ``result()``) and returned."""
-        err: Optional[Exception] = None
-        try:
-            outs: List[Any] = list(self.step_fn([r.payload
-                                                 for r in batch]))
-            if len(outs) != len(batch):
-                raise RuntimeError(
-                    f"step_fn returned {len(outs)} results for "
-                    f"{len(batch)} requests")
-        except Exception as e:      # surfaced via result() / run()
-            err = e
-            outs = [_Failure(e)] * len(batch)
+        """Run one step (with retries) and publish its results; a step
+        error is attributed to exactly the requests in this batch — it
+        is stored per request as a typed :class:`RequestError` (surfaced
+        by ``result()``), returned raw (for ``run()``), and the lane
+        worker survives to serve the next batch."""
+        outs, err, attempts = self._run_step(batch)
         now = time.time()
+        if err is not None:
+            wrapped = RequestError(
+                f"{self._label()} batch of {len(batch)} request(s) "
+                f"failed after {attempts} attempt(s): {err!r}",
+                lane=self.name, attempts=attempts,
+                req_ids=[r.req_id for r in batch])
+            wrapped.__cause__ = err
+            outs = [_Failure(wrapped)] * len(batch)
         with self._cv:
             for r, o in zip(batch, outs):
                 self._results[r.req_id] = o
-                self._latency_of[r.req_id] = now - r.arrival
-                self.latencies.append(now - r.arrival)
+                lat = now - r.arrival
+                self._latency_of[r.req_id] = lat
+                self.latencies.append(lat)
+                self.lat_by_priority[r.priority].append(lat)
+                if (r.deadline_s is not None and r.deadline_s > 0
+                        and lat > r.deadline_s):
+                    self.deadline_misses += 1
             self._pending -= len(batch)
             self.batch_sizes.append(len(batch))
+            if err is not None:
+                self.failed_batches += 1
+                if self.breaker is not None \
+                        and self.breaker.record_failure(now):
+                    self._drain_queues_locked(CircuitOpen(
+                        f"{self._label()} circuit breaker tripped after "
+                        f"{self.breaker.failures} consecutive batch "
+                        "failures; queued requests shed",
+                        lane=self.name, failures=self.breaker.failures))
+            elif self.breaker is not None:
+                self.breaker.record_success()
+            if self.budget is not None:
+                self.budget.update(self._windowed_p95_locked(),
+                                   self._tightest_deadline_locked(),
+                                   self._queued_units)
             self._cv.notify_all()
         return err
+
+    def _windowed_p95_locked(self) -> Optional[float]:
+        if len(self.latencies) < 5:
+            return None
+        return float(np.percentile(list(self.latencies), 95))
+
+    def _tightest_deadline_locked(self) -> Optional[float]:
+        return min(self._deadline_window) if self._deadline_window \
+            else None
+
+    def _drain_queues_locked(self, error: BaseException) -> None:
+        """Fail every queued request with ``error`` (caller holds cv)."""
+        for p in PRIORITIES:
+            q = self._queues[p]
+            while q:
+                r = q.popleft()
+                self._results[r.req_id] = _Failure(error)
+                self._pending -= 1
+        self._queued_units = 0
+        self._queued_units_by = {p: 0 for p in PRIORITIES}
+        self._queued_reqs = 0
 
     def run(self, total: int) -> Dict[int, Any]:
         """Serve exactly ``total`` queued requests on the calling thread
@@ -272,8 +507,8 @@ class ContinuousBatcher:
             batch = self._collect()
             if batch:
                 self._serve(batch)
-            elif self._stop.is_set() and self._q.empty():
-                # drain contract: only exit once the queue is empty
+            elif self._stop.is_set() and self.queued_units == 0:
+                # drain contract: only exit once the queues are empty
                 return
 
     def result(self, req_id: int, timeout: Optional[float] = None, *,
@@ -316,30 +551,30 @@ class ContinuousBatcher:
         # here (drain=False), or guaranteed served by the drain
         with self._cv:
             if not drain:
-                dropped = []
-                while True:
-                    try:
-                        dropped.append(self._q.get_nowait())
-                    except queue.Empty:
-                        break
-                for r in dropped:
-                    self._results[r.req_id] = _Failure(
-                        RuntimeError("batcher stopped before serving "
-                                     f"req_id {r.req_id!r}"))
-                self._pending -= len(dropped)
+                for p in PRIORITIES:
+                    q = self._queues[p]
+                    while q:
+                        r = q.popleft()
+                        self._results[r.req_id] = _Failure(RuntimeError(
+                            f"{self._label()} stopped before serving "
+                            f"req_id {r.req_id!r}"))
+                        self._pending -= 1
+                self._queued_units = 0
+                self._queued_units_by = {p: 0 for p in PRIORITIES}
+                self._queued_reqs = 0
             self._stop.set()
             self._cv.notify_all()
         if self._thread is not None:
             self._thread.join(timeout=timeout)
             if self._thread.is_alive():
                 raise TimeoutError(
-                    f"batcher worker did not join within {timeout}s; "
-                    "its step function is still running")
+                    f"{self._label()} worker did not join within "
+                    f"{timeout}s; its step function is still running")
             self._thread = None
         elif drain:
             # never started: no worker owns the drain, so serve the
             # queue inline — stop() must not orphan admitted requests
-            while not self._q.empty():
+            while self.queued_units > 0 or self._queued_reqs > 0:
                 batch = self._collect()
                 if batch:
                     self._serve(batch)
@@ -358,13 +593,22 @@ class ContinuousBatcher:
             self._submitted.discard(req_id)
 
     def reset_telemetry(self) -> None:
-        """Clear the windowed telemetry (latency + batch-size deques).
-        Served-request bookkeeping is untouched — this only re-bases the
-        window so e.g. percentiles computed after a warmup phase don't
-        mix pre- and post-warmup samples."""
+        """Clear the windowed telemetry (latency + batch-size deques,
+        per-priority windows) and the robustness counters. Served-request
+        bookkeeping and breaker *state* are untouched — this only
+        re-bases the windows so e.g. percentiles computed after a warmup
+        phase don't mix pre- and post-warmup samples."""
         with self._cv:
             self.latencies.clear()
             self.batch_sizes.clear()
+            for d in self.lat_by_priority.values():
+                d.clear()
+            self.rejected = 0
+            self.rejected_by_priority = {p: 0 for p in PRIORITIES}
+            self.retries = 0
+            self.failed_batches = 0
+            self.deadline_misses = 0
+            self.deadlines_admitted = 0
 
     def telemetry(self) -> Tuple[List[float], List[int]]:
         """Consistent snapshot of (latencies, batch sizes) — the live
@@ -377,3 +621,60 @@ class ContinuousBatcher:
     def pending(self) -> int:
         with self._cv:
             return self._pending
+
+    @property
+    def queued_units(self) -> int:
+        """Queued-but-unserved work, in ``size_of`` units."""
+        with self._cv:
+            return self._queued_units
+
+    @property
+    def current_batch_rows(self) -> int:
+        """The row budget the next batch will target (dynamic when a
+        policy is attached, else the static Eq. 11 choice)."""
+        with self._cv:
+            return self._target_units()
+
+    def reset_breaker(self, *, force: bool = False) -> bool:
+        """Close an open breaker (the supervisor path). Unless ``force``,
+        only resets after the policy's cooldown has elapsed. Returns
+        True when the breaker was actually closed."""
+        with self._cv:
+            if self.breaker is None or not self.breaker.open:
+                return False
+            if not force and not self.breaker.cooled_down(time.time()):
+                return False
+            self.breaker.reset()
+            self.breaker_resets += 1
+            self._cv.notify_all()
+            return True
+
+    def telemetry_by_priority(self) -> Dict[str, List[float]]:
+        """Consistent snapshot of per-priority-class latencies."""
+        with self._cv:
+            return {p: list(d) for p, d in self.lat_by_priority.items()}
+
+    def health(self) -> Dict[str, Any]:
+        """Snapshot of the lane's robustness counters and SLO state."""
+        with self._cv:
+            return {
+                "name": self.name,
+                "queued_units": self._queued_units,
+                "queued_by_priority": dict(self._queued_units_by),
+                "rejected": self.rejected,
+                "rejected_by_priority": dict(self.rejected_by_priority),
+                "retries": self.retries,
+                "failed_batches": self.failed_batches,
+                "deadline_misses": self.deadline_misses,
+                "deadlines_admitted": self.deadlines_admitted,
+                "breaker_open": (self.breaker.open
+                                 if self.breaker else False),
+                "breaker_trips": (self.breaker.trips
+                                  if self.breaker else 0),
+                "breaker_resets": self.breaker_resets,
+                "batch_rows": self._target_units(),
+                "budget_shrinks": (self.budget.shrinks
+                                   if self.budget else 0),
+                "budget_grows": (self.budget.grows
+                                 if self.budget else 0),
+            }

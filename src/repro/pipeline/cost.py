@@ -199,6 +199,70 @@ def choose_batch_size(p: OpProfile, device: str, *,
     return best
 
 
+@dataclass
+class DynamicBudget:
+    """Eq. 11 made adaptive for SLO-aware serving lanes.
+
+    ``base_rows`` is the static Eq. 11 optimum (:func:`choose_batch_size`
+    picked it for peak throughput). Under deadline pressure a lane
+    trades that throughput for tail latency: when the windowed p95 of
+    request latency approaches the **tightest admitted deadline**, the
+    row budget halves (down to ``min_rows``) so batches complete — and
+    queued requests start — sooner; when the pressure clears or the lane
+    goes idle the budget doubles back toward the Eq. 11 optimum.
+
+    The controller is pure state + arithmetic (no clocks, no threads):
+    the owning batcher calls :meth:`update` after each served batch with
+    its measured p95 and the tightest deadline currently admitted, and
+    reads :attr:`current` when sizing the next batch.
+    """
+    base_rows: int
+    min_rows: int = 8
+    shrink_at: float = 0.8      # p95/deadline ratio that triggers shrink
+    grow_at: float = 0.4        # ratio below which the budget regrows
+    current: int = 0
+    shrinks: int = 0
+    grows: int = 0
+
+    def __post_init__(self):
+        self.base_rows = max(int(self.base_rows), 1)
+        self.min_rows = max(min(int(self.min_rows), self.base_rows), 1)
+        if not self.current:
+            self.current = self.base_rows
+
+    def update(self, p95_s: Optional[float],
+               tightest_deadline_s: Optional[float],
+               queued_units: int = 0) -> int:
+        """One control step; returns the new row budget.
+
+        ``p95_s`` is the lane's windowed tail latency (None = no samples
+        yet), ``tightest_deadline_s`` the smallest relative deadline
+        among recently admitted requests (None = nobody asked for one),
+        ``queued_units`` the backlog depth (0 = idle, which always
+        regrows — an idle lane should re-enter traffic at full Eq. 11
+        throughput)."""
+        if tightest_deadline_s is None or tightest_deadline_s <= 0:
+            return self._grow()          # no SLO pressure: run at optimum
+        if queued_units == 0:
+            return self._grow()          # idle: regrow toward base
+        if p95_s is None:
+            return self.current
+        ratio = p95_s / tightest_deadline_s
+        if ratio > self.shrink_at:
+            if self.current > self.min_rows:
+                self.current = max(self.current // 2, self.min_rows)
+                self.shrinks += 1
+        elif ratio < self.grow_at:
+            self._grow()
+        return self.current
+
+    def _grow(self) -> int:
+        if self.current < self.base_rows:
+            self.current = min(self.current * 2, self.base_rows)
+            self.grows += 1
+        return self.current
+
+
 def profile_for_model(n_params: float, bytes_per_row: float,
                       flops_per_row: Optional[float] = None,
                       dtype_bytes: int = 4) -> OpProfile:

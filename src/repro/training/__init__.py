@@ -1,3 +1,6 @@
+from repro.training.fault import (ElasticScaler, FaultInjector,
+                                  InjectedFault, StragglerMonitor,
+                                  TrainController)
 from repro.training.optimizer import (AdamWState, OptimizerConfig,
                                       abstract_state, apply_updates,
                                       init_state, state_axes)
@@ -5,6 +8,8 @@ from repro.training.step import (make_eval_step, make_prefill_step,
                                  make_serve_step, make_train_step)
 
 __all__ = [
+    "ElasticScaler", "FaultInjector", "InjectedFault", "StragglerMonitor",
+    "TrainController",
     "AdamWState", "OptimizerConfig", "abstract_state", "apply_updates",
     "init_state", "state_axes", "make_eval_step", "make_prefill_step",
     "make_serve_step", "make_train_step",

@@ -1,4 +1,5 @@
-"""Fault tolerance for pod-scale training.
+"""Fault tolerance for pod-scale training — and fault *injection* for
+the serving path.
 
 Components (all exercised by tests with simulated failures):
   - ``TrainController``: checkpoint-every-N + automatic restart-from-latest
@@ -10,17 +11,103 @@ Components (all exercised by tests with simulated failures):
   - ``ElasticScaler``: recompute data-parallel layout when the healthy host
     set changes, and reshard the latest checkpoint onto it (Mvec range
     reads; no full-checkpoint rewrite needed).
+  - ``FaultInjector``: the serving-side chaos hook. Threaded through
+    ``BackendPool.set_fault_injector`` it fires on every backend
+    ``run_infer`` call — probabilistic or scripted ``InjectedFault``
+    errors, stalls, and slow batches — so the admission layer's retry /
+    breaker / fault-attribution machinery can be exercised by tests and
+    ``benchmarks/bench_overload.py`` without a real flaky device.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.storage.checkpoint import CheckpointManager
+
+
+class InjectedFault(RuntimeError):
+    """A simulated backend failure (distinguishable from real errors so
+    chaos tests can assert nothing *else* broke)."""
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic chaos for backend inference calls.
+
+    Faults are decided per ``run_infer`` call (one trunk batch), indexed
+    from 0 in call order, so a *retry* of a failed batch is a fresh call
+    with a fresh roll — exactly the transient-failure model the
+    batcher's retry/backoff path targets. ``scripted_errors`` pins
+    specific call indices to fail regardless of ``error_rate`` (e.g.
+    ``{0, 1, 2}`` trips a threshold-3 breaker deterministically).
+
+    Thread-safe: lanes on different backends share one injector.
+    """
+    error_rate: float = 0.0          # P(call raises InjectedFault)
+    scripted_errors: Sequence[int] = ()
+    slow_rate: float = 0.0           # P(call sleeps slow_s first)
+    slow_s: float = 0.0
+    stall_rate: float = 0.0          # P(call wedges stall_s — long sleeps
+    stall_s: float = 0.0             # exercise the stop-timeout path)
+    kinds: Sequence[str] = ("embed", "predict")
+    seed: int = 0
+    armed: bool = True
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._lock = threading.Lock()
+        self._scripted = set(int(i) for i in self.scripted_errors)
+        self.calls = 0
+        self.injected_errors = 0
+        self.injected_slow = 0
+        self.injected_stalls = 0
+        self.error_calls: List[int] = []   # which call indices failed
+
+    def arm(self) -> None:
+        self.armed = True
+
+    def disarm(self) -> None:
+        """Stop injecting (counters keep their totals) — benches disarm
+        for the fault-free parity leg without rebuilding the server."""
+        self.armed = False
+
+    def on_infer(self, spec, n_rows: int) -> None:
+        """Called by the backend at the top of every ``run_infer``.
+        May sleep (slow/stall) and may raise :class:`InjectedFault`."""
+        if not self.armed or getattr(spec, "kind", None) not in self.kinds:
+            return
+        with self._lock:
+            idx = self.calls
+            self.calls += 1
+            fail = idx in self._scripted \
+                or (self.error_rate > 0
+                    and self._rng.random() < self.error_rate)
+            slow = (self.slow_rate > 0
+                    and self._rng.random() < self.slow_rate)
+            stall = (self.stall_rate > 0
+                     and self._rng.random() < self.stall_rate)
+            if slow:
+                self.injected_slow += 1
+            if stall:
+                self.injected_stalls += 1
+            if fail:
+                self.injected_errors += 1
+                self.error_calls.append(idx)
+        if slow and self.slow_s > 0:
+            time.sleep(self.slow_s)
+        if stall and self.stall_s > 0:
+            time.sleep(self.stall_s)
+        if fail:
+            raise InjectedFault(
+                f"injected backend fault on infer call {idx} "
+                f"({getattr(spec, 'kind', '?')}/"
+                f"{getattr(spec, 'task', '?')}, {n_rows} rows)")
 
 
 @dataclass

@@ -1,0 +1,570 @@
+"""Admission control, backpressure, fault-tolerant lanes, and the
+serving-side FaultInjector (ISSUE 7 robustness layer).
+
+Covers: typed Rejected/CircuitOpen/RequestError outcomes, priority-class
+caps and weighted draining, block-mode backpressure, the deadline-aware
+DynamicBudget, retry-with-backoff, the lane circuit breaker + supervisor
+reset, chaos injection through BackendPool, and the stop-timeout path a
+wedged lane takes through MorphingServer.stop().
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import make_task, pretrain_model
+from repro.core.task import TaskSpec
+from repro.engine import MorphingServer, MorphingSession
+from repro.pipeline import (AdmissionPolicy, CircuitOpen, ContinuousBatcher,
+                            DynamicBudget, OpProfile, Rejected, Request,
+                            RequestError)
+from repro.training.fault import FaultInjector, InjectedFault
+
+PROF = OpProfile(flops_per_row=1e5, bytes_per_row=128, model_bytes=1e6)
+
+
+def make_batcher(step, *, batch_size=4, policy=None, name="lane0", **kw):
+    kw.setdefault("max_wait_s", 0.001)
+    kw.setdefault("idle_wait_s", 0.01)
+    return ContinuousBatcher(step, batch_size=batch_size, name=name,
+                             policy=policy, **kw)
+
+
+# -- policy validation -----------------------------------------------------
+
+def test_policy_rejects_unknown_mode_and_priorities():
+    with pytest.raises(ValueError, match="mode"):
+        AdmissionPolicy(mode="drop")
+    with pytest.raises(ValueError, match="priority"):
+        AdmissionPolicy(per_priority_rows={"vip": 10})
+    with pytest.raises(ValueError, match="priority"):
+        AdmissionPolicy(weights={"urgent": 4})
+
+
+def test_unknown_priority_rejected_at_submit():
+    cb = make_batcher(lambda xs: xs, policy=AdmissionPolicy())
+    with pytest.raises(ValueError, match="priority"):
+        cb.submit(Request(0, 1.0, priority="vip"))
+
+
+def test_policy_backoff_is_capped_exponential():
+    pol = AdmissionPolicy(retry_backoff_s=0.01, retry_backoff_cap_s=0.03)
+    assert pol.backoff_s(1) == pytest.approx(0.01)
+    assert pol.backoff_s(2) == pytest.approx(0.02)
+    assert pol.backoff_s(3) == pytest.approx(0.03)     # capped
+    assert pol.backoff_s(10) == pytest.approx(0.03)
+
+
+# -- queue caps + backpressure ---------------------------------------------
+
+def test_reject_mode_pushes_back_at_queue_cap():
+    pol = AdmissionPolicy(max_queue_rows=2, mode="reject")
+    cb = make_batcher(lambda xs: xs, policy=pol)   # no worker: queue holds
+    cb.submit(Request(0, 1.0))
+    cb.submit(Request(1, 2.0))
+    with pytest.raises(Rejected) as ei:
+        cb.submit(Request(2, 3.0))
+    assert ei.value.reason == "queue_full"
+    assert ei.value.lane == "lane0"
+    assert ei.value.queued_units == 2
+    assert cb.rejected == 1
+    # the rejected request left no state: its req_id is still free
+    cb.run(total=2)
+    cb.submit(Request(2, 3.0))
+
+
+def test_per_priority_cap_sheds_one_class_only():
+    pol = AdmissionPolicy(max_queue_rows=100,
+                          per_priority_rows={"best_effort": 1})
+    cb = make_batcher(lambda xs: xs, policy=pol)
+    cb.submit(Request(0, 1.0, priority="best_effort"))
+    with pytest.raises(Rejected):
+        cb.submit(Request(1, 2.0, priority="best_effort"))
+    # other classes keep admitting past the best-effort cap
+    cb.submit(Request(2, 3.0, priority="interactive"))
+    cb.submit(Request(3, 4.0, priority="batch"))
+    assert cb.rejected_by_priority["best_effort"] == 1
+    assert cb.rejected_by_priority["interactive"] == 0
+
+
+def test_block_mode_waits_for_drain_then_admits():
+    pol = AdmissionPolicy(max_queue_rows=1, mode="block",
+                          block_timeout_s=5.0)
+    cb = make_batcher(lambda xs: [x * 2 for x in xs], batch_size=1,
+                      policy=pol).start()
+    for i in range(6):                 # every submit past a full queue
+        cb.submit(Request(i, float(i)))  # blocks until the worker drains
+    outs = {i: cb.result(i, timeout=5.0) for i in range(6)}
+    cb.stop()
+    assert outs == {i: i * 2.0 for i in range(6)}
+
+
+def test_block_mode_times_out_to_rejected():
+    pol = AdmissionPolicy(max_queue_rows=1, mode="block",
+                          block_timeout_s=0.05)
+    cb = make_batcher(lambda xs: xs, policy=pol)   # no worker: never drains
+    cb.submit(Request(0, 1.0))
+    t0 = time.time()
+    with pytest.raises(Rejected) as ei:
+        cb.submit(Request(1, 2.0))
+    assert ei.value.reason == "block_timeout"
+    assert time.time() - t0 >= 0.04                # actually waited
+
+
+# -- weighted priority draining --------------------------------------------
+
+def test_weighted_drain_serves_interactive_first():
+    order = []
+
+    def step(ps):
+        order.extend(ps)
+        return ps
+
+    cb = make_batcher(step, batch_size=1, max_wait_s=0.0,
+                      policy=AdmissionPolicy())
+    for i in range(6):
+        cb.submit(Request(i, "be", priority="best_effort"))
+    for i in range(6, 12):
+        cb.submit(Request(i, "ia", priority="interactive"))
+    cb.run(total=12)
+    # interactive weight (8) covers all six queued: they all drain first
+    assert order[:6] == ["ia"] * 6
+    assert order[6:] == ["be"] * 6
+
+
+def test_weighted_drain_does_not_starve_best_effort():
+    order = []
+
+    def step(ps):
+        order.extend(ps)
+        return ps
+
+    pol = AdmissionPolicy(weights={"interactive": 2, "batch": 1,
+                                   "best_effort": 1})
+    cb = make_batcher(step, batch_size=1, max_wait_s=0.0, policy=pol)
+    for i in range(8):
+        cb.submit(Request(i, "ia", priority="interactive"))
+    for i in range(8, 12):
+        cb.submit(Request(i, "be", priority="best_effort"))
+    cb.run(total=12)
+    # weight 2:1 -> best-effort work interleaves instead of waiting for
+    # the whole interactive backlog
+    assert "be" in order[:4]
+
+
+# -- satellite (a): submit after stop --------------------------------------
+
+def test_submit_after_stop_raises_lane_stopped():
+    cb = make_batcher(lambda xs: xs, name="trunk-a").start()
+    cb.submit(Request(0, 1.0))
+    cb.stop()
+    with pytest.raises(RuntimeError, match="lane 'trunk-a' stopped"):
+        cb.submit(Request(1, 2.0))
+    # the legacy unnamed batcher keeps a clear message too
+    cb2 = ContinuousBatcher(lambda xs: xs, PROF, device="host")
+    cb2.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        cb2.submit(Request(0, 1.0))
+
+
+# -- fault-tolerant lanes --------------------------------------------------
+
+def test_request_error_scoped_to_failed_batch_lane_survives():
+    def step(ps):
+        if "bad" in ps:
+            raise ValueError("poison payload")
+        return ps
+
+    pol = AdmissionPolicy(retry_limit=0, breaker_threshold=0)
+    cb = make_batcher(step, batch_size=1, max_wait_s=0.0,
+                      policy=pol, name="L").start()
+    cb.submit(Request(0, "ok-1"))
+    assert cb.result(0, timeout=5.0) == "ok-1"
+    cb.submit(Request(1, "bad"))
+    with pytest.raises(RequestError) as ei:
+        cb.result(1, timeout=5.0)
+    assert ei.value.req_ids == (1,)
+    assert ei.value.lane == "L"
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert "poison payload" in str(ei.value)
+    # the lane worker survived the failed batch and keeps serving
+    cb.submit(Request(2, "ok-2"))
+    assert cb.result(2, timeout=5.0) == "ok-2"
+    assert cb.failed_batches == 1
+    cb.stop()
+
+
+def test_transient_failure_retries_then_succeeds():
+    attempts = []
+
+    def flaky(ps):
+        attempts.append(1)
+        if len(attempts) == 1:
+            raise OSError("transient device hiccup")
+        return ps
+
+    pol = AdmissionPolicy(retry_limit=2, retry_backoff_s=0.001)
+    cb = make_batcher(flaky, batch_size=4, policy=pol).start()
+    cb.submit(Request(0, 7.0))
+    assert cb.result(0, timeout=5.0) == 7.0        # recovered, not failed
+    assert cb.retries == 1
+    assert cb.failed_batches == 0
+    cb.stop()
+
+
+def test_retry_budget_exhausted_reports_attempts():
+    def always_bad(ps):
+        raise OSError("still down")
+
+    pol = AdmissionPolicy(retry_limit=2, retry_backoff_s=0.001,
+                          breaker_threshold=0)
+    cb = make_batcher(always_bad, batch_size=1, policy=pol).start()
+    cb.submit(Request(0, 1.0))
+    with pytest.raises(RequestError) as ei:
+        cb.result(0, timeout=5.0)
+    assert ei.value.attempts == 3                  # 1 try + 2 retries
+    assert cb.retries == 2
+    cb.stop()
+
+
+def test_breaker_trips_sheds_and_supervisor_resets():
+    healthy = threading.Event()
+
+    def step(ps):
+        if not healthy.is_set():
+            raise OSError("backend down")
+        return ps
+
+    pol = AdmissionPolicy(retry_limit=0, breaker_threshold=2,
+                          breaker_cooldown_s=0.05)
+    cb = make_batcher(step, batch_size=1, max_wait_s=0.0,
+                      policy=pol, name="B").start()
+    for i in range(5):
+        cb.submit(Request(i, float(i)))
+    outcomes = {}
+    for i in range(5):
+        try:
+            cb.result(i, timeout=5.0)
+            outcomes[i] = "ok"
+        except CircuitOpen:
+            outcomes[i] = "shed"
+        except RequestError:
+            outcomes[i] = "failed"
+    # exactly threshold batches failed; the rest were shed by the trip
+    assert list(outcomes.values()).count("failed") == 2
+    assert list(outcomes.values()).count("shed") == 3
+    assert cb.breaker.open and cb.breaker.trips == 1
+    # open breaker sheds new submits with the typed error
+    with pytest.raises(CircuitOpen):
+        cb.submit(Request(10, 1.0))
+    # supervisor path: reset only succeeds after the cooldown
+    healthy.set()
+    deadline = time.time() + 2.0
+    while not cb.reset_breaker() and time.time() < deadline:
+        time.sleep(0.01)
+    assert not cb.breaker.open and cb.breaker_resets == 1
+    cb.submit(Request(11, 42.0))
+    assert cb.result(11, timeout=5.0) == 42.0      # lane restarted
+    cb.stop()
+
+
+# -- deadline-aware dynamic budget -----------------------------------------
+
+def test_dynamic_budget_shrinks_and_regrows():
+    b = DynamicBudget(base_rows=64, min_rows=8)
+    assert b.current == 64
+    b.update(0.9, 1.0, queued_units=10)            # p95/deadline = 0.9
+    assert b.current == 32 and b.shrinks == 1
+    b.update(0.9, 1.0, queued_units=10)
+    b.update(0.9, 1.0, queued_units=10)
+    b.update(0.9, 1.0, queued_units=10)
+    assert b.current == 8                          # floored at min_rows
+    b.update(0.1, 1.0, queued_units=10)            # comfortably under SLO
+    assert b.current == 16 and b.grows >= 1
+    b.update(None, None, queued_units=0)           # idle: regrow
+    b.update(None, None, queued_units=0)
+    assert b.current == 64                         # capped at base
+
+
+def test_lane_shrinks_batches_under_tight_deadlines():
+    def slow(ps):
+        time.sleep(0.02)
+        return ps
+
+    pol = AdmissionPolicy(min_batch_rows=1, breaker_threshold=0)
+    cb = make_batcher(slow, batch_size=32, policy=pol)
+    n = 60
+    for i in range(n):          # standing backlog: every post-batch
+        cb.submit(Request(i, float(i), deadline_s=0.02))  # update sees
+    cb.start()                  # queued work + p95 >= the 20ms deadline
+    for i in range(n):
+        cb.result(i, timeout=30.0)
+    cb.stop()
+    assert cb.budget.shrinks > 0
+    assert cb.budget.current < 32
+    assert cb.deadline_misses > 0                  # every serve ran late
+    assert cb.deadlines_admitted == n
+
+
+# -- FaultInjector ---------------------------------------------------------
+
+def test_fault_injector_scripted_call_indices():
+    from repro.pipeline.backend import InferSpec, NumpyBackend
+
+    class M:
+        def features(self, X):
+            return np.asarray(X, np.float32) * 2
+
+        def head(self, F):
+            return F.mean(axis=1)
+
+    be = NumpyBackend()
+    fi = FaultInjector(scripted_errors={0})
+    be.fault_injector = fi
+    spec = InferSpec(kind="embed", task="t", col="x", out="f",
+                     table="tab", version="v", model=M())
+    X = np.ones((4, 3), np.float32)
+    with pytest.raises(InjectedFault, match="call 0"):
+        be.run_infer(spec, {"x": X})
+    out = be.run_infer(spec, {"x": X})             # retry = fresh call
+    np.testing.assert_allclose(out["f"], X * 2)
+    assert fi.calls == 2 and fi.injected_errors == 1
+    assert fi.error_calls == [0]
+
+
+def test_fault_injector_disarm_and_rate():
+    from repro.pipeline.backend import InferSpec, NumpyBackend
+
+    class M:
+        def features(self, X):
+            return np.asarray(X, np.float32)
+
+    be = NumpyBackend()
+    fi = FaultInjector(error_rate=1.0)
+    be.fault_injector = fi
+    spec = InferSpec(kind="embed", task="t", col="x", out="f",
+                     table="tab", version="v", model=M())
+    with pytest.raises(InjectedFault):
+        be.run_infer(spec, {"x": np.ones((2, 2), np.float32)})
+    fi.disarm()
+    be.run_infer(spec, {"x": np.ones((2, 2), np.float32)})
+    assert fi.injected_errors == 1                 # disarmed calls free
+
+
+# -- MorphingServer integration --------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_zoo():
+    rng = np.random.default_rng(3)
+    src = make_task(rng, "gauss", n=120, dim=16, classes=3)
+    return [pretrain_model(src, width=12, seed=1, name="m0")]
+
+
+@pytest.fixture(scope="module")
+def table():
+    rng = np.random.default_rng(0)
+    n = 200
+    return {"len": rng.integers(1, 200, n),
+            "emb": rng.standard_normal((n, 16)).astype(np.float32)}
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return make_task(np.random.default_rng(1), "gauss", n=128, dim=16,
+                     classes=3)
+
+
+def make_session(tmp_path, zoo, table, **kw):
+    sess = MorphingSession(zoo=zoo, root=tmp_path, model_store="decoupled",
+                           backend="numpy", **kw)
+    sess.register_table("reviews",
+                        {k: v.copy() for k, v in table.items()})
+    sess.create_task(TaskSpec("sent", "series", ("P", "N")))
+    sess.registry._resolution["sent"] = 0
+    return sess
+
+
+def test_server_priorities_deadlines_in_stats(tmp_path, serve_zoo, table,
+                                              sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess, policy=AdmissionPolicy())
+    with server:
+        r_ia = server.submit("PREDICT emb USING TASK sent FROM reviews",
+                             priority="interactive", deadline_ms=60000)
+        r_be = server.submit("PREDICT emb USING TASK sent FROM reviews",
+                             priority="best_effort")
+        server.result(r_ia, timeout=10.0)
+        server.result(r_be, timeout=10.0)
+        st = server.stats()
+        assert st.deadlines_admitted == 1
+        assert st.deadline_misses == 0             # 60s deadline held
+        assert "interactive" in st.p95_latency_s_by_priority
+        assert "best_effort" in st.p95_latency_s_by_priority
+        assert st.rejected == 0
+        assert st.batch_rows_by_lane               # dynamic budget visible
+        health = server.health()
+        assert len(health) == 1
+        (h,) = health.values()
+        assert h["breaker_open"] is False
+        with pytest.raises(ValueError, match="priority"):
+            server.submit("PREDICT emb USING TASK sent FROM reviews",
+                          priority="vip")
+
+
+def test_server_backpressure_rejects_when_lane_saturated(
+        tmp_path, serve_zoo, table, sample):
+    nrows = len(table["len"])
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    fi = FaultInjector(slow_rate=1.0, slow_s=0.2)
+    sess.backends.set_fault_injector(fi)
+    # cap: one queued request's rows fit, two don't
+    pol = AdmissionPolicy(max_queue_rows=int(nrows * 1.5))
+    server = MorphingServer(session=sess, policy=pol)
+    with server:
+        r0 = server.submit("PREDICT emb USING TASK sent FROM reviews")
+        time.sleep(0.1)           # worker popped r0, is inside slow step
+        r1 = server.submit("PREDICT emb USING TASK sent FROM reviews")
+        with pytest.raises(Rejected) as ei:
+            server.submit("PREDICT emb USING TASK sent FROM reviews",
+                          priority="best_effort")
+        assert ei.value.reason == "queue_full"
+        server.result(r0, timeout=10.0)
+        server.result(r1, timeout=10.0)            # queued one still served
+        st = server.stats()
+        assert st.rejected == 1
+        assert st.rejected_by_priority == {"best_effort": 1}
+
+
+def test_server_fault_injection_parity_without_restart(
+        tmp_path, serve_zoo, table, sample):
+    """Killed batches surface as RequestError on exactly their requests;
+    every non-injected request matches the fault-free engine answer and
+    the server never restarts."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    thrs = [20, 40, 60, 80, 100, 120]
+    ref = {t: sess.sql("PREDICT emb USING TASK sent FROM reviews "
+                       f"WHERE len < {t}").rows["_score"] for t in thrs}
+    pol = AdmissionPolicy(retry_limit=0, breaker_threshold=3,
+                          breaker_cooldown_s=0.01)
+    server = MorphingServer(session=sess, policy=pol)
+    with server:
+        # attach chaos only after warmup so resolution/staging calls
+        # don't consume scripted indices
+        warm = server.submit("PREDICT emb USING TASK sent FROM reviews "
+                             f"WHERE len < {thrs[0]}")
+        server.result(warm, timeout=10.0)
+        fi = FaultInjector(scripted_errors={1, 3})
+        sess.backends.set_fault_injector(fi)
+        failed, ok = [], []
+        # len < t grows with t: every query has fresh cache-miss rows,
+        # so each serve is one injector-visible trunk call
+        for t in thrs[1:]:
+            rid = server.submit("PREDICT emb USING TASK sent FROM "
+                                f"reviews WHERE len < {t}")
+            try:
+                out = server.result(rid, timeout=10.0)
+                ok.append((t, out))
+            except RequestError as e:
+                assert isinstance(e.__cause__, InjectedFault)
+                failed.append(t)
+        assert len(failed) == 2                    # exactly the scripted
+        assert fi.injected_errors == 2
+        for t, out in ok:                          # parity on survivors
+            np.testing.assert_allclose(out.scores, ref[t], rtol=1e-5)
+        # server survived without a restart: same worker set serves on
+        rid = server.submit("PREDICT emb USING TASK sent FROM reviews "
+                            f"WHERE len < {thrs[0]}")
+        server.result(rid, timeout=10.0)
+        st = server.stats()
+        assert st.failed_batches == 2
+        assert not st.breaker_open_lanes           # 2 < threshold 3
+        sess.backends.set_fault_injector(None)
+
+
+def test_server_breaker_trip_and_supervisor_restart(
+        tmp_path, serve_zoo, table, sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    pol = AdmissionPolicy(retry_limit=0, breaker_threshold=2,
+                          breaker_cooldown_s=0.3)
+    server = MorphingServer(session=sess, policy=pol)
+    with server:
+        warm = server.submit("PREDICT emb USING TASK sent FROM reviews "
+                             "WHERE len < 20")
+        server.result(warm, timeout=10.0)
+        fi = FaultInjector(error_rate=1.0)         # kill every batch
+        sess.backends.set_fault_injector(fi)
+        for t in (40, 60):                         # two failed batches
+            rid = server.submit("PREDICT emb USING TASK sent FROM "
+                                f"reviews WHERE len < {t}")
+            with pytest.raises(RequestError):
+                server.result(rid, timeout=10.0)
+        st = server.stats()
+        assert st.breaker_trips == 1
+        assert st.breaker_open_lanes               # lane is shedding
+        with pytest.raises(CircuitOpen):
+            server.submit("PREDICT emb USING TASK sent FROM reviews "
+                          "WHERE len < 80")
+        # heal the backend; the supervisor resets on the next submit
+        # after the cooldown and the lane serves again
+        fi.disarm()
+        time.sleep(0.35)
+        rid = server.submit("PREDICT emb USING TASK sent FROM reviews "
+                            "WHERE len < 80")
+        server.result(rid, timeout=10.0)
+        st = server.stats()
+        assert st.breaker_resets == 1
+        assert not st.breaker_open_lanes
+        sess.backends.set_fault_injector(None)
+
+
+# -- satellite (c): PR 6 stop-timeout path through the server --------------
+
+def test_server_stop_timeout_names_lane_then_retry_succeeds(
+        tmp_path, serve_zoo, table, sample):
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess)
+    server.start()
+    warm = server.submit("PREDICT emb USING TASK sent FROM reviews "
+                         "WHERE len < 20")
+    server.result(warm, timeout=10.0)
+    lane = server._lane_of_task["sent"]
+    entered, release = threading.Event(), threading.Event()
+    orig_step = lane.batcher.step_fn
+
+    def wedged(ps):
+        entered.set()
+        release.wait(10.0)
+        return orig_step(ps)
+
+    lane.batcher.step_fn = wedged
+    server.submit("PREDICT emb USING TASK sent FROM reviews "
+                  "WHERE len < 40")
+    assert entered.wait(5.0)                       # worker is wedged
+    with pytest.raises(RuntimeError, match="did not join") as ei:
+        server.stop(timeout=0.2)
+    assert lane.key in str(ei.value)               # names the stuck lane
+    release.set()                                  # backend un-wedges
+    server.stop(timeout=10.0)                      # retry joins cleanly
+    assert lane.batcher._thread is None
+
+
+def test_server_stop_clean_after_prior_timed_out_attempt(
+        tmp_path, serve_zoo, table, sample):
+    """A healthy server shuts down cleanly even when an earlier stop()
+    attempt (on another, wedged server) timed out — per-server state,
+    no cross-contamination — and repeated stop() is idempotent."""
+    sess = make_session(tmp_path, serve_zoo, table)
+    sess.resolve_task("sent", sample.X, sample.y)
+    server = MorphingServer(session=sess)
+    with server:
+        rid = server.submit("PREDICT emb USING TASK sent FROM reviews")
+        server.result(rid, timeout=10.0)
+    server.stop()                                  # idempotent second stop
+    for lane in server._lanes.values():
+        assert lane.batcher._thread is None
