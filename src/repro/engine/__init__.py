@@ -3,23 +3,31 @@ annotated DAG -> chunked pipeline runtime, with model resolution through
 the selection subspace + storage catalog and pre-embedding via the
 vector-share cache. `MorphingSession` is the single entry point.
 """
+from repro.engine.config import EngineConfig
 from repro.engine.plan import (CompileContext, LogicalPlan, PlanNode,
                                annotate_plan, compile_plan, insert_embeds,
-                               optimize, push_down_filters)
+                               lower_similarity, optimize,
+                               push_down_filters)
 from repro.engine.serve import (MorphingServer, ServeResult, ServerStats)
 from repro.pipeline.admission import (AdmissionPolicy, CircuitOpen,
                                       Rejected, RequestError)
 from repro.engine.session import (MorphingSession, QueryReport, QueryResult,
                                   ResolvedModel)
 from repro.engine.sql import (CreateTaskStmt, QueryStmt, SelectItem,
-                              TaskCall, parse, tokenize)
+                              TaskCall, encode_text, parse, tokenize)
+from repro.pipeline.share import (AnnConfig, AnnShareTier, CacheChain,
+                                  CacheTier, IvfFlatIndex, TierLookup)
 
 __all__ = [
+    "EngineConfig",
     "CompileContext", "LogicalPlan", "PlanNode", "annotate_plan",
-    "compile_plan", "insert_embeds", "optimize", "push_down_filters",
+    "compile_plan", "insert_embeds", "lower_similarity", "optimize",
+    "push_down_filters",
     "MorphingServer", "ServeResult", "ServerStats",
     "AdmissionPolicy", "CircuitOpen", "Rejected", "RequestError",
     "MorphingSession", "QueryReport", "QueryResult", "ResolvedModel",
-    "CreateTaskStmt", "QueryStmt", "SelectItem", "TaskCall", "parse",
-    "tokenize",
+    "CreateTaskStmt", "QueryStmt", "SelectItem", "TaskCall",
+    "encode_text", "parse", "tokenize",
+    "AnnConfig", "AnnShareTier", "CacheChain", "CacheTier",
+    "IvfFlatIndex", "TierLookup",
 ]

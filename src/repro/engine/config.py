@@ -1,0 +1,84 @@
+"""EngineConfig: the one construction surface for the engine.
+
+`MorphingSession` and `MorphingServer` historically grew overlapping
+keyword arguments (the server's ``devices=`` int versus the session's
+``device_count=``, duplicated store/calibration/share knobs forwarded
+through ``**session_kw``), each pair needing its own conflict check.
+`EngineConfig` collapses them into one validated dataclass consumed by
+both entry points::
+
+    cfg = EngineConfig(model_store="decoupled", device_count=2,
+                       cache_tiers=("exact", "ann"),
+                       ann=AnnConfig(error_bound=0.1))
+    sess = MorphingSession(selector=sel, zoo=zoo, config=cfg)
+    server = MorphingServer(config=cfg)
+
+Every legacy keyword keeps working as a deprecation shim: explicit
+kwargs overlay the config (and the server's ``devices=`` emits a
+DeprecationWarning pointing at ``device_count``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from repro.pipeline.share import AnnConfig
+
+# sentinel distinguishing "kwarg not passed" from an explicit value, so
+# legacy kwargs can overlay a provided config without clobbering it
+UNSET: Any = object()
+
+_VALID_STORES = ("blob", "decoupled")
+_VALID_TIERS = ("exact", "ann")
+
+
+@dataclass
+class EngineConfig:
+    """Shared engine configuration (session + server).
+
+    ``cache_tiers`` names the share-cache chain in lookup order:
+    ``("exact",)`` is the classic fingerprint-equality cache;
+    ``("exact", "ann")`` appends the opt-in approximate tier
+    (:class:`repro.pipeline.share.AnnShareTier`) configured by ``ann``.
+    ``policy`` is the serving admission policy (ignored by plain
+    sessions)."""
+
+    model_store: str = "blob"
+    backend: str = "auto"
+    devices: Tuple[str, ...] = ("host", "tpu")
+    device_count: int = 1
+    auto_calibrate: bool = True
+    enable_share: bool = True
+    share_capacity_bytes: int = 1 << 30
+    cache_tiers: Tuple[str, ...] = ("exact",)
+    ann: Optional[AnnConfig] = None
+    chunk_rows: int = 256
+    max_inflight: int = 3
+    workers: int = 4
+    optimize_plans: bool = True
+    policy: Optional[Any] = None         # AdmissionPolicy (serving only)
+
+    def validate(self) -> "EngineConfig":
+        if self.model_store not in _VALID_STORES:
+            raise ValueError(f"unknown model_store {self.model_store!r}")
+        tiers = tuple(self.cache_tiers)
+        unknown = [t for t in tiers if t not in _VALID_TIERS]
+        if unknown:
+            raise ValueError(
+                f"unknown cache tier(s) {unknown}; valid: {_VALID_TIERS}")
+        if tiers and tiers[0] != "exact":
+            # approximate tiers serve *residual* misses; putting one in
+            # front of the exact tier would approximate rows the cache
+            # could have answered exactly
+            raise ValueError("cache_tiers must start with 'exact'")
+        if self.device_count < 1:
+            raise ValueError(
+                f"device_count must be >= 1, got {self.device_count}")
+        return self
+
+    def overlaid(self, overrides: Dict[str, Any]) -> "EngineConfig":
+        """Copy with explicitly-passed legacy kwargs overlaid (UNSET
+        entries are dropped)."""
+        real = {k: v for k, v in overrides.items() if v is not UNSET}
+        return dataclasses.replace(self, **real) if real else self

@@ -54,13 +54,22 @@ _CMP: Dict[str, Callable[[np.ndarray, Any], np.ndarray]] = {
 @dataclass
 class PlanNode:
     op: str                      # scan | filter | project | embed
-    #                            # | predict | agg
+    #                            # | predict | agg | sort | limit
+    #                            # | index_scan
     args: Dict[str, Any] = field(default_factory=dict)
 
     def describe(self) -> str:
         a = self.args
         if self.op == "scan":
             return f"scan({a['table']})"
+        if self.op == "index_scan":
+            return (f"index_scan({a['table']}.{a['col']} "
+                    f"top-{a['k']} via cache chain)")
+        if self.op == "sort":
+            d = "ASC" if a.get("ascending") else "DESC"
+            return f"sort(SIMILARITY({a['col']}) {d})"
+        if self.op == "limit":
+            return f"limit({a['k']})"
         if self.op == "filter":
             preds = " AND ".join(f"{c}{o}{v!r}" for c, o, v in a["preds"])
             return f"filter({preds})"
@@ -109,6 +118,23 @@ class LogicalPlan:
             specs: Sequence[Tuple[str, str, str]]) -> "LogicalPlan":
         self.nodes.append(PlanNode("agg", {"group_by": group_by,
                                            "specs": list(specs)}))
+        return self
+
+    def order_by_similarity(self, col: str, query: Any,
+                            ascending: bool = False,
+                            drop_col: Optional[str] = None
+                            ) -> "LogicalPlan":
+        """Rank rows by nearness of ``col`` to ``query`` (a vector or a
+        text string). Like `agg`, sorting is applied by the session over
+        the concatenated stream, not per chunk. ``drop_col`` marks a
+        column carried only for ordering (dropped from the output)."""
+        self.nodes.append(PlanNode("sort", {
+            "col": col, "query": query, "ascending": ascending,
+            "drop_col": drop_col}))
+        return self
+
+    def limit(self, k: int) -> "LogicalPlan":
+        self.nodes.append(PlanNode("limit", {"k": int(k)}))
         return self
 
     # -- introspection ---------------------------------------------------
@@ -206,6 +232,39 @@ def annotate_plan(plan: LogicalPlan, profiles: Dict[str, OpProfile],
     return plan
 
 
+def lower_similarity(plan: LogicalPlan) -> LogicalPlan:
+    """Serve ``ORDER BY SIMILARITY(...) LIMIT k`` straight from the
+    share-cache chain: when the plan has no filter or aggregate and
+    wants the nearest rows first, the scan is replaced by an
+    ``index_scan`` node that scores the whole table through the cache
+    tiers (warm cache = exact/ANN gather, zero trunk rows) and feeds
+    only the k nearest rows to the rest of the plan."""
+    ops = plan.ops()
+    if "sort" not in ops or "limit" not in ops:
+        return plan
+    if "filter" in ops or "agg" in ops:
+        # predicates/aggregates must see every surviving row before the
+        # top-k cut; fall back to the post-stream sort + limit
+        return plan
+    sort = next(n for n in plan.nodes if n.op == "sort")
+    if sort.args.get("ascending"):
+        return plan                  # fast path is nearest-first only
+    lim = next(n for n in plan.nodes if n.op == "limit")
+    col = sort.args["col"]
+    # an embed/predict consuming the column scopes similarity to that
+    # task's trunk embedding space (the session resolves the model)
+    task = next((n.args["task"] for n in plan.nodes
+                 if n.op in ("embed", "predict")
+                 and n.args.get("col") == col), None)
+    idx = PlanNode("index_scan", {
+        "table": plan.table, "col": col, "query": sort.args["query"],
+        "k": int(lim.args["k"]), "task": task,
+        "drop_col": sort.args.get("drop_col")})
+    plan.nodes = [idx] + [n for n in plan.nodes[1:]
+                          if n.op not in ("sort", "limit")]
+    return plan
+
+
 def optimize(plan: LogicalPlan, profiles: Dict[str, OpProfile],
              nrows_hint: int = 1024, devices=("host", "tpu"),
              hw: Optional[Dict[str, HardwareProfile]] = None) -> LogicalPlan:
@@ -213,6 +272,7 @@ def optimize(plan: LogicalPlan, profiles: Dict[str, OpProfile],
     plan = insert_embeds(plan)
     # pushdown again: embed insertion may leave a filter above an embed
     plan = push_down_filters(plan)
+    plan = lower_similarity(plan)
     return annotate_plan(plan, profiles, nrows_hint, devices, hw=hw)
 
 

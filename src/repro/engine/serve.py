@@ -58,12 +58,14 @@ from __future__ import annotations
 
 import itertools
 import threading
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.zoo import adapt_input_width
+from repro.engine.config import EngineConfig
 from repro.engine.session import MorphingSession
 from repro.engine.sql import QueryStmt, parse
 from repro.engine.plan import _make_pred
@@ -108,8 +110,13 @@ class ServerStats:
     loaded_bytes: int = 0            # model bytes read from disk
     stored_bytes: int = 0            # model bytes held by the store
     # share-aware serving: the embed/head split inside the lanes
-    share_hits: int = 0              # embed rows served from the cache
+    share_hits: int = 0              # embed rows served exactly from cache
     share_misses: int = 0            # embed rows not in cache (pre-dedup)
+    approx_hits: int = 0             # embed rows served by the ANN tier
+    #                                # (nearest cached neighbor within the
+    #                                # calibrated radius, not byte-equal)
+    false_accepts: int = 0           # audited approx hits whose exact
+    #                                # recomputation exceeded the bound
     dedup_rows: int = 0              # in-flight duplicates folded away
     embed_rows: int = 0              # rows actually run through a trunk
     embed_batches: int = 0
@@ -155,8 +162,11 @@ class ServerStats:
 
     @property
     def share_hit_rate(self) -> float:
-        t = self.share_hits + self.share_misses
-        return self.share_hits / t if t else 0.0
+        """Cache-served fraction of embed rows — exact and approximate
+        hits both spared a trunk forward."""
+        hits = self.share_hits + self.approx_hits
+        t = hits + self.share_misses
+        return hits / t if t else 0.0
 
     @property
     def dedup_rate(self) -> float:
@@ -201,6 +211,8 @@ class _Lane:
     lock: threading.Lock = field(default_factory=threading.Lock)
     share_hits: int = 0
     share_misses: int = 0
+    approx_hits: int = 0
+    false_accepts: int = 0
     dedup_rows: int = 0
 
     @property
@@ -219,15 +231,22 @@ class MorphingServer:
     """
 
     def __init__(self, session: Optional[MorphingSession] = None, *,
+                 config: Optional[EngineConfig] = None,
                  max_wait_s: float = 0.002, idle_wait_s: float = 0.05,
                  mem_cap_bytes: float = 2e9, nrows_hint: int = 2048,
                  share_lanes: bool = True, devices: Optional[int] = None,
                  stop_timeout_s: float = 30.0,
                  policy: Optional[AdmissionPolicy] = None, **session_kw):
+        if devices is not None:
+            warnings.warn(
+                "MorphingServer(devices=...) is deprecated; pass "
+                "config=EngineConfig(device_count=...) (shared with "
+                "MorphingSession) instead", DeprecationWarning,
+                stacklevel=2)
         if session is None:
             if devices is not None:
                 session_kw.setdefault("device_count", devices)
-            session = MorphingSession(**session_kw)
+            session = MorphingSession(config=config, **session_kw)
         elif devices is not None and devices != getattr(
                 session, "device_count", 1):
             raise ValueError(
@@ -246,8 +265,16 @@ class MorphingServer:
         self.share_lanes = share_lanes
         self.stop_timeout_s = stop_timeout_s
         # admission policy is applied to every lane; None keeps the
-        # legacy unbounded FIFO lanes
+        # legacy unbounded FIFO lanes. The shared EngineConfig is the
+        # canonical source (explicit policy= overrides it).
+        if policy is None:
+            src = config or getattr(session, "config", None)
+            policy = src.policy if src is not None else None
         self.policy = policy
+        # decoupled-store trunk pins held for the active lanes (released
+        # on stop): the layer-cache LRU never evicts a trunk a live
+        # embed lane would immediately re-read
+        self._pins: List[str] = []
         self._lanes: Dict[str, _Lane] = {}
         self._lane_of_task: Dict[str, _Lane] = {}
         self._task_of: Dict[int, str] = {}
@@ -256,12 +283,29 @@ class MorphingServer:
         self._running = False
 
     # -- lifecycle ---------------------------------------------------------
+    def _pin_task(self, rm) -> None:
+        """Pin a served task's trunk layers in the decoupled store so the
+        byte-capped layer cache evicts around them (must be called with
+        ``self._lock`` held; refcounted, released on :meth:`stop`)."""
+        if rm.store != "decoupled":
+            return
+        try:
+            self.session.dstore.pin_model(rm.model_id)
+        except KeyError:
+            return                   # not in this store's catalog
+        self._pins.append(rm.model_id)
+
     def start(self) -> "MorphingServer":
         with self._lock:
             if self._running:
                 raise RuntimeError("server already started")
             self._running = True
             for lane in self._lanes.values():
+                # a restart re-pins the lanes' trunks (stop released them)
+                for task in lane.requests_by_task:
+                    rm = self.session.models.get(task)
+                    if rm is not None:
+                        self._pin_task(rm)
                 lane.batcher.start()
         return self
 
@@ -289,11 +333,19 @@ class MorphingServer:
         # on a wedged lane; fall through so this call retries the joins
         timeout = self.stop_timeout_s if timeout is None else timeout
         stuck: List[str] = []
-        for lane in lanes:
-            try:
-                lane.batcher.stop(drain=drain, timeout=timeout)
-            except TimeoutError:
-                stuck.append(lane.key)
+        try:
+            for lane in lanes:
+                try:
+                    lane.batcher.stop(drain=drain, timeout=timeout)
+                except TimeoutError:
+                    stuck.append(lane.key)
+        finally:
+            # release the trunk pins: a stopped server's lanes no longer
+            # defend their trunks against layer-cache eviction
+            with self._lock:
+                pins, self._pins = self._pins, []
+            for mid in pins:
+                self.session.dstore.unpin_model(mid)
         if stuck:
             raise RuntimeError(
                 f"serving lane worker(s) did not join within {timeout}s: "
@@ -355,6 +407,10 @@ class MorphingServer:
                     lane.batcher.start()
                 self._lanes[key] = lane
             if task not in lane.requests_by_task:
+                # active lanes pin their trunks in the decoupled layer
+                # cache (a fine-tune joining a shared lane pins the base
+                # trunk its references resolve to)
+                self._pin_task(rm)
                 # a second task joining an existing trunk lane only needs
                 # its own head stage; the trunk work is shared. Mutations
                 # go under the lane lock: stats()/reset_telemetry()
@@ -437,10 +493,15 @@ class MorphingServer:
         return step
 
     def _share_step(self, lane: _Lane, backend: ExecutionBackend):
-        """Trunk-lane step: batched share-cache lookup -> single-flight
+        """Trunk-lane step: batched cache-chain lookup -> single-flight
         dedup -> trunk forward on unique missing rows -> write-back ->
         per-task head stages."""
-        share = self.session.share
+        # with the ANN tier enabled the lanes consult the whole chain
+        # (exact tier first, calibrated nearest-neighbor reuse for the
+        # residual misses); otherwise just the exact tier
+        share = (self.session.cache_chain
+                 if getattr(self.session, "ann", None) is not None
+                 else self.session.share)
         use_share = self.session.enable_share
 
         def step(payloads: List[Tuple[str, np.ndarray]]) -> List[np.ndarray]:
@@ -459,42 +520,71 @@ class MorphingServer:
 
     def _embed(self, lane: _Lane, backend: ExecutionBackend,
                share, X: np.ndarray) -> np.ndarray:
-        """Embeddings for one coalesced chunk: cache rows are gathered,
-        unique missing rows computed once, results written back."""
+        """Embeddings for one coalesced chunk: cache rows are gathered
+        (exactly or via the ANN tier's calibrated reuse), unique missing
+        rows computed once, results written back. Audited approx hits
+        are recomputed exactly, reported via ``record_audit`` and served
+        exact — the serving path keeps the tier's radius honest."""
         n = len(X)
         if n == 0:
             return np.zeros((0, 1), np.float32)
         if share is None:
             return np.asarray(
                 backend.run_infer(lane.spec, {"x": X})[lane.spec.out])
-        keys, found, miss = share.get_many(_SHARE_TABLE, lane.key, X,
-                                           version=lane.key)
+        look = share.lookup_many(_SHARE_TABLE, lane.key, X,
+                                 version=lane.key)
+        keys, miss = look.keys, look.miss
         n_miss = int(miss.sum())
-        if n_miss == 0:
+        n_approx = len(look.approx_idx)
+        # rows that must run the trunk: real misses plus the audit
+        # sample of the approximate hits
+        need = miss.copy()
+        if len(look.audit_idx):
+            need[look.audit_idx] = True
+        if not need.any():
             with lane.lock:
-                lane.share_hits += n
-            return found
+                lane.share_hits += n - n_approx
+                lane.approx_hits += n_approx
+            return look.found
         # single-flight dedup: identical in-flight rows (across the
         # coalesced requests of this batch) compute once. The lane's
         # single worker serializes batches, so rows computed here are in
         # the cache before any later batch looks them up.
-        miss_idx = np.flatnonzero(miss)
-        uniq, first = np.unique(keys[miss_idx], return_index=True)
-        comp_idx = miss_idx[first]
+        need_idx = np.flatnonzero(need)
+        uniq, first = np.unique(keys[need_idx], return_index=True)
+        comp_idx = need_idx[first]
         computed = np.asarray(
             backend.run_infer(lane.spec, {"x": X[comp_idx]})[lane.spec.out],
             np.float32)
-        share.put_many(_SHARE_TABLE, lane.key, keys[comp_idx], computed,
-                       version=lane.key)
-        E = (np.asarray(found, np.float32) if found is not None
+        E = (np.asarray(look.found, np.float32) if look.found is not None
              else np.zeros((n, computed.shape[1]), np.float32))
+        fa = 0
+        if len(look.audit_idx):
+            exact = computed[np.searchsorted(uniq, keys[look.audit_idx])]
+            errs = np.linalg.norm(
+                E[look.audit_idx].astype(np.float64) - exact, axis=1)
+            order = np.argsort(look.approx_idx, kind="stable")
+            loc = order[np.searchsorted(look.approx_idx[order],
+                                        look.audit_idx)]
+            record = getattr(share, "record_audit", None)
+            if record is not None:
+                record(_SHARE_TABLE, lane.key, lane.key,
+                       look.approx_dist[loc], errs)
+            ann = getattr(share, "ann", None)
+            if ann is not None:
+                fa = int((errs > ann.cfg.error_bound).sum())
         # computed[j] embeds uniq[j] (np.unique sorts): scatter back to
-        # every duplicate miss row in one searchsorted
-        E[miss_idx] = computed[np.searchsorted(uniq, keys[miss_idx])]
+        # every duplicate needed row in one searchsorted — audited rows
+        # get their exact recomputation, not the approximation
+        E[need_idx] = computed[np.searchsorted(uniq, keys[need_idx])]
+        share.insert_many(_SHARE_TABLE, lane.key, keys[comp_idx],
+                          X[comp_idx], computed, version=lane.key)
         with lane.lock:
-            lane.share_hits += n - n_miss
+            lane.share_hits += n - n_miss - n_approx
             lane.share_misses += n_miss
-            lane.dedup_rows += n_miss - len(comp_idx)
+            lane.approx_hits += n_approx
+            lane.false_accepts += fa
+            lane.dedup_rows += len(need_idx) - len(comp_idx)
         return E
 
     # -- request admission -------------------------------------------------
@@ -622,10 +712,13 @@ class MorphingServer:
                 heads = list(lane.heads.values())
                 st.share_hits += lane.share_hits
                 st.share_misses += lane.share_misses
+                st.approx_hits += lane.approx_hits
+                st.false_accepts += lane.false_accepts
                 st.dedup_rows += lane.dedup_rows
-                t = lane.share_hits + lane.share_misses
+                hits = lane.share_hits + lane.approx_hits
+                t = hits + lane.share_misses
                 st.share_hit_rate_by_lane[lane.key] = \
-                    lane.share_hits / t if t else 0.0
+                    hits / t if t else 0.0
                 st.tasks_by_lane[lane.key] = len(lane.requests_by_task)
             for task, c in served_tasks:
                 st.requests += c
@@ -700,6 +793,7 @@ class MorphingServer:
             lane.batcher.reset_telemetry()
             with lane.lock:
                 lane.share_hits = lane.share_misses = lane.dedup_rows = 0
+                lane.approx_hits = lane.false_accepts = 0
                 for task in lane.requests_by_task:
                     lane.requests_by_task[task] = 0
                 heads = list(lane.heads.values())

@@ -30,10 +30,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.task import TaskRegistry, TaskSpec
-from repro.core.zoo import ZooModel
-from repro.engine.plan import (CompileContext, LogicalPlan, compile_plan,
-                               optimize)
-from repro.engine.sql import CreateTaskStmt, QueryStmt, parse
+from repro.core.zoo import ZooModel, adapt_input_width
+from repro.engine.config import UNSET, EngineConfig
+from repro.engine.plan import (CompileContext, LogicalPlan, PlanNode,
+                               compile_plan, optimize)
+from repro.engine.sql import CreateTaskStmt, QueryStmt, encode_text, parse
 from repro.pipeline.backend import (ExecutionBackend, JaxBackend,
                                     MeshJaxBackend, NumpyBackend,
                                     make_backends)
@@ -43,7 +44,8 @@ from repro.pipeline.cost import (HardwareProfile, OpProfile, calibrate,
 from repro.pipeline.operators import (Batch, aggregate, batch_len,
                                       groupby_aggs)
 from repro.pipeline.scheduler import PipelineExecutor
-from repro.pipeline.share import VectorShareCache
+from repro.pipeline.share import (AnnConfig, AnnShareTier, CacheChain,
+                                  VectorShareCache)
 from repro.storage.catalog import Catalog
 from repro.storage.stores import BlobStore, DecoupledStore
 
@@ -122,6 +124,15 @@ class QueryReport:
     compile_count: int = 0          # jit compiles triggered by this query
     share_hits: int = 0
     share_misses: int = 0
+    approx_hits: int = 0            # rows served by the ANN tier (within
+    #                               # the calibrated distance of a cached
+    #                               # row, not byte-identical)
+    false_accepts: int = 0          # audited approx hits whose exact
+    #                               # recomputation exceeded the bound
+    sim_trunk_rows: int = 0         # rows the similarity path had to run
+    #                               # through the trunk (0 = warm cache)
+    index_scan: bool = False        # ORDER BY SIMILARITY lowered to the
+    #                               # ANN index-scan fast path
     batch_batches: int = 0
     batch_rows: int = 0
     batch_infer_seconds: float = 0.0
@@ -186,43 +197,66 @@ class MorphingSession:
 
     def __init__(self, selector=None, zoo: Optional[List[ZooModel]] = None,
                  root: Optional[Path] = None, *,
-                 devices: Tuple[str, ...] = ("host", "tpu"),
-                 device_count: int = 1,
-                 backend: str = "auto", enable_share: bool = True,
-                 chunk_rows: int = 256, max_inflight: int = 3,
-                 workers: int = 4, optimize_plans: bool = True,
-                 share_capacity_bytes: int = 1 << 30,
-                 model_store: str = "blob",
-                 auto_calibrate: bool = True):
-        if model_store not in ("blob", "decoupled"):
-            raise ValueError(f"unknown model_store {model_store!r}")
+                 config: Optional[EngineConfig] = None,
+                 devices: Tuple[str, ...] = UNSET,
+                 device_count: int = UNSET,
+                 backend: str = UNSET, enable_share: bool = UNSET,
+                 chunk_rows: int = UNSET, max_inflight: int = UNSET,
+                 workers: int = UNSET, optimize_plans: bool = UNSET,
+                 share_capacity_bytes: int = UNSET,
+                 model_store: str = UNSET,
+                 auto_calibrate: bool = UNSET,
+                 cache_tiers: Tuple[str, ...] = UNSET,
+                 ann: Optional[AnnConfig] = UNSET):
+        # every legacy kwarg is a deprecation shim overlaying the shared
+        # EngineConfig; passing only kwargs builds a config from them
+        cfg = (config or EngineConfig()).overlaid({
+            "devices": devices, "device_count": device_count,
+            "backend": backend, "enable_share": enable_share,
+            "chunk_rows": chunk_rows, "max_inflight": max_inflight,
+            "workers": workers, "optimize_plans": optimize_plans,
+            "share_capacity_bytes": share_capacity_bytes,
+            "model_store": model_store, "auto_calibrate": auto_calibrate,
+            "cache_tiers": cache_tiers, "ann": ann}).validate()
+        self.config = cfg
         self.root = Path(root) if root else Path(
             tempfile.mkdtemp(prefix="morphingdb-"))
         self.catalog = Catalog(self.root / "catalog")
         self.blobs = BlobStore(self.root / "models", self.catalog)
         self.dstore = DecoupledStore(self.root / "layers", self.catalog)
-        self.model_store = model_store
-        self.share = VectorShareCache(self.root / "share",
-                                      capacity_bytes=share_capacity_bytes)
+        self.model_store = cfg.model_store
+        self.share = VectorShareCache(
+            self.root / "share", capacity_bytes=cfg.share_capacity_bytes)
+        # the share surface is a CacheTier chain: the exact fingerprint
+        # tier always leads; the opt-in ANN tier serves residual misses
+        # with calibrated nearest-neighbor reuse
+        tiers = [self.share]
+        self.ann: Optional[AnnShareTier] = None
+        if "ann" in cfg.cache_tiers:
+            self.ann = AnnShareTier(cfg.ann or AnnConfig(),
+                                    capacity_bytes=cfg.share_capacity_bytes)
+            tiers.append(self.ann)
+        self.cache_chain = CacheChain(tiers)
         self.registry = TaskRegistry(selector=selector, zoo=zoo)
         self.zoo = zoo or []
-        self.devices = devices
+        self.devices = cfg.devices
         # the pool is dict-compatible with the old registry; with
         # device_count > 1 its jax annotation spans a mesh (clamped to
         # the devices jax actually exposes — a clamp to 1 falls back to
         # the parity-exact single-device backends)
         self.backends = make_backends(
-            backend, devices=devices, device_count=device_count)
+            cfg.backend, devices=cfg.devices,
+            device_count=cfg.device_count)
         self.device_count = getattr(self.backends, "device_count", 1)
-        self.enable_share = enable_share
+        self.enable_share = cfg.enable_share
         self.hw: Optional[Dict[str, HardwareProfile]] = None
-        self.chunk_rows = chunk_rows
-        self.max_inflight = max_inflight
-        self.workers = workers
-        self.optimize_plans = optimize_plans
+        self.chunk_rows = cfg.chunk_rows
+        self.max_inflight = cfg.max_inflight
+        self.workers = cfg.workers
+        self.optimize_plans = cfg.optimize_plans
         self.tables: Dict[str, Batch] = {}
         self.models: Dict[str, ResolvedModel] = {}
-        if auto_calibrate:
+        if cfg.auto_calibrate:
             self._auto_calibrate()
 
     def _auto_calibrate(self) -> None:
@@ -585,6 +619,88 @@ class MorphingSession:
         return optimize(plan, profiles, nrows_hint=hint,
                         devices=self.devices, hw=self.hw)
 
+    # -- similarity queries -----------------------------------------------
+    def _sim_model(self, nodes: List[PlanNode],
+                   col: str) -> Optional[ResolvedModel]:
+        """Task context for ``SIMILARITY(col, ...)``: the first
+        embed/predict node consuming the column scopes similarity to
+        that task's trunk embedding space; without one, similarity runs
+        in raw row space."""
+        for node in nodes:
+            if (node.op in ("embed", "predict")
+                    and node.args.get("col") == col):
+                rm = self.models.get(node.args.get("task"))
+                if rm is not None:
+                    return rm
+        return None
+
+    def _sim_embed(self, tname: str, col: str, rows: np.ndarray,
+                   rm: ResolvedModel) -> Tuple[np.ndarray, int]:
+        """Embeddings for similarity scoring, served through the cache
+        chain under the same (table, column, trunk) keys the embed
+        nodes use — on a warm cache this is a pure gather (exact tier)
+        or ANN reuse, zero trunk rows. Returns ``(E, trunk_rows)``."""
+        if not self.enable_share:
+            return np.asarray(rm.features(np.asarray(rows)),
+                              np.float32), len(rows)
+        c0 = self.cache_chain.computed_rows
+        E = self.cache_chain.get_or_embed(
+            tname, col, rows,
+            lambda A: np.asarray(rm.features(np.asarray(A)), np.float32),
+            version=(rm.trunk_fp or rm.version))
+        return np.asarray(E, np.float32), \
+            self.cache_chain.computed_rows - c0
+
+    def _similarity_scores(self, tname: str, col: str, rows: np.ndarray,
+                           query, rm: Optional[ResolvedModel]
+                           ) -> Tuple[np.ndarray, int]:
+        """Similarity (negative L2 distance — larger = nearer) of every
+        table row to the query, in the task trunk's embedding space when
+        one scopes the column, else raw row space. The query is a vector
+        literal (input-width, or embedding-width to skip the query-side
+        embed entirely) or a text string feature-hashed to input width.
+        Returns ``(sims, trunk_rows)``."""
+        R = np.asarray(rows)
+        Rf = R.reshape(len(R), -1).astype(np.float32, copy=False)
+        width = Rf.shape[1]
+        if rm is None:                       # raw row space: no trunk
+            q = (encode_text(query, width) if isinstance(query, str)
+                 else np.asarray(query, np.float32).reshape(-1))
+            q = adapt_input_width(q[None], width)[0]
+            return -np.linalg.norm(Rf - q[None], axis=1), 0
+        E, trunk_rows = self._sim_embed(tname, col, R, rm)
+        if (not isinstance(query, str)
+                and len(np.asarray(query).reshape(-1)) == rm.head_dim
+                and rm.head_dim != width):
+            # embedding-width literal: compare directly, no query embed
+            qE = np.asarray(query, np.float32).reshape(-1)
+        else:
+            qrow = (encode_text(query, width) if isinstance(query, str)
+                    else np.asarray(query, np.float32).reshape(-1))
+            qrow = adapt_input_width(qrow[None], width).astype(
+                Rf.dtype if R.dtype == np.float32 else np.float32)
+            qe, qt = self._sim_embed(tname, col, qrow, rm)
+            qE, trunk_rows = qe[0], trunk_rows + qt
+        return -np.linalg.norm(E - qE[None], axis=1), trunk_rows
+
+    def _run_index_scan(self, node: PlanNode, table: Batch
+                        ) -> Tuple[Batch, np.ndarray, int]:
+        """The lowered top-k fast path: score the whole table against
+        the query through the cache chain (warm = ANN/exact gather, no
+        trunk) and slice the k nearest rows as the new source table."""
+        args = node.args
+        rows = np.asarray(table[args["col"]])
+        rm = self.models.get(args.get("task") or "")
+        sims, trunk_rows = self._similarity_scores(
+            args["table"], args["col"], rows, args["query"], rm)
+        order = np.argsort(-sims, kind="stable")[:args["k"]]
+        sliced = {c: np.asarray(v)[order] for c, v in table.items()}
+        return sliced, sims[order], trunk_rows
+
+    @staticmethod
+    def _slice_rows(rows: Batch, idx: np.ndarray) -> Batch:
+        return {c: np.asarray(v)[idx] for c, v in rows.items()}
+
     def execute_plan(self, plan: LogicalPlan, sql_text: str = "",
                      chunk_rows: Optional[int] = None,
                      max_inflight: Optional[int] = None) -> QueryResult:
@@ -595,17 +711,43 @@ class MorphingSession:
                     f"task {node.args['task']!r} not resolved; call "
                     "resolve_task(name, X_sample, y_sample) first")
         plan = self.compile(plan, nrows_hint=batch_len(table))
+        # similarity ordering + limit run over the concatenated stream
+        # (like final aggregation); an index_scan source replaces the
+        # scan entirely — the k-row slice feeds the rest of the dag
+        post_nodes = [n for n in plan.nodes if n.op in ("sort", "limit")]
+        core_nodes = [n for n in plan.nodes
+                      if n.op not in ("sort", "limit")]
+        idx_node = (core_nodes[0]
+                    if core_nodes and core_nodes[0].op == "index_scan"
+                    else None)
+        if idx_node is not None:
+            core_nodes = ([PlanNode("scan",
+                                    {"table": idx_node.args["table"]})]
+                          + core_nodes[1:])
+        exec_plan = (LogicalPlan(core_nodes)
+                     if (post_nodes or idx_node is not None) else plan)
         ctx = CompileContext(
             models=self.models,
-            share=self.share if self.enable_share else None,
             # embeddings depend only on the trunk, so the share cache and
             # the staged-weight lookup key on the trunk identity: fine-
             # tunes of one base reuse the base's cached embeddings and
-            # staged trunk (BLOB models fall back to the version string)
+            # staged trunk (BLOB models fall back to the version string).
+            # With the ANN tier enabled the embed nodes consult the whole
+            # chain row-granularly; otherwise the classic chunk-level
+            # exact cache serves them.
+            share=((self.cache_chain if self.ann is not None
+                    else self.share) if self.enable_share else None),
             share_version_of={t: (m.trunk_fp or m.version)
                               for t, m in self.models.items()})
-        dag, source_id, sink_id, agg_node = compile_plan(plan, ctx)
+        dag, source_id, sink_id, agg_node = compile_plan(exec_plan, ctx)
         h0, m0 = self.share.stats.hits, self.share.stats.misses
+        a0 = (self.ann.stats.approx_hits, self.ann.stats.false_accepts) \
+            if self.ann is not None else (0, 0)
+        sim_trunk_rows = 0
+        sim_scores: Optional[np.ndarray] = None
+        if idx_node is not None:
+            table, sim_scores, sim_trunk_rows = \
+                self._run_index_scan(idx_node, table)
         distinct_backends = {id(b): b for b in self.backends.values()}
         c0 = sum(getattr(b, "compile_count", 0)
                  for b in distinct_backends.values())
@@ -624,6 +766,36 @@ class MorphingSession:
             specs = agg_node.args["specs"]
             rows = (groupby_aggs(rows, g, specs) if g
                     else aggregate(rows, specs))
+        drop_col: Optional[str] = None
+        if idx_node is not None:
+            # chunked execution of a filterless plan preserves row
+            # order, so the index_scan's similarity column re-attaches
+            # positionally to the k output rows
+            if sim_scores is not None and batch_len(rows) == len(sim_scores):
+                rows = dict(rows)
+                rows["_sim"] = sim_scores
+            drop_col = idx_node.args.get("drop_col")
+        for pn in post_nodes:
+            if pn.op == "sort":
+                col = pn.args["col"]
+                rm = self._sim_model(core_nodes, col)
+                sims, t = self._similarity_scores(
+                    plan.table, col, np.asarray(rows[col]),
+                    pn.args["query"], rm)
+                sim_trunk_rows += t
+                order = np.argsort(
+                    sims if pn.args.get("ascending") else -sims,
+                    kind="stable")
+                rows = self._slice_rows(rows, order)
+                rows["_sim"] = sims[order]
+                drop_col = pn.args.get("drop_col") or drop_col
+            elif pn.op == "limit":
+                k = pn.args["k"]
+                if batch_len(rows) > k:
+                    rows = self._slice_rows(
+                        rows, np.arange(k, dtype=np.int64))
+        if drop_col is not None and drop_col in rows:
+            rows = {c: v for c, v in rows.items() if c != drop_col}
         report = QueryReport(
             sql=sql_text, plan=plan.describe(),
             resolution={t: m.model_id for t, m in self.models.items()
@@ -641,7 +813,13 @@ class MorphingSession:
                            for n in plan.nodes
                            if n.op == "embed" and "batch_size" in n.args},
             share_hits=self.share.stats.hits - h0,
-            share_misses=self.share.stats.misses - m0)
+            share_misses=self.share.stats.misses - m0,
+            approx_hits=(self.ann.stats.approx_hits - a0[0]
+                         if self.ann is not None else 0),
+            false_accepts=(self.ann.stats.false_accepts - a0[1]
+                           if self.ann is not None else 0),
+            sim_trunk_rows=sim_trunk_rows,
+            index_scan=idx_node is not None)
         for t in report.resolution:
             m = self.models[t]
             report.loaded_bytes += m.loaded_bytes

@@ -13,27 +13,55 @@ Supported statements::
     PREDICT emb USING TASK sentiment_classifier FROM reviews
         WHERE len > 20;
 
+    SELECT id FROM reviews
+        ORDER BY SIMILARITY(emb, [0.1, 0.2, 0.3]) LIMIT 5;
+
 WHERE supports conjunctions of ``col <op> literal`` with op in
 ``> >= < <= = !=``; aggregates are ``COUNT(*|col)``, ``SUM``, ``AVG``
 over plain columns or task calls ``task(col)``. Task calls resolve to a
 model through the session (selection subspace + catalog) — the user never
 names a model.
+
+``ORDER BY SIMILARITY(col, <query>)`` ranks rows by nearness to the
+query — a ``[v1, v2, ...]`` vector literal or a quoted text string
+(feature-hashed to the column width by :func:`encode_text`). The default
+(``DESC``) order is nearest-first; with ``LIMIT k`` and no filter or
+aggregate, the optimizer lowers the whole query to an index scan served
+from the share-cache chain (the ANN tier's top-k fast path).
 """
 from __future__ import annotations
 
 import re
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.task import TaskSpec
 from repro.engine.plan import LogicalPlan
 
 _TOKEN_RE = re.compile(
     r"\s*(?:(?P<num>-?\d+\.\d+|-?\d+)|(?P<id>[A-Za-z_]\w*)"
-    r"|(?P<str>'[^']*'|\"[^\"]*\")|(?P<sym><=|>=|!=|<>|[(),*=<>;]))")
+    r"|(?P<str>'[^']*'|\"[^\"]*\")|(?P<sym><=|>=|!=|<>|[(),*=<>;\[\]]))")
 
 _AGGS = {"COUNT": "count", "SUM": "sum", "AVG": "mean"}
 _CMP_OPS = {">", ">=", "<", "<=", "=", "!=", "<>"}
+
+
+def encode_text(text: str, dim: int) -> np.ndarray:
+    """Deterministic feature-hashing text vectorizer for SIMILARITY
+    query literals: character trigrams hashed (crc32, stable across
+    processes) into ``dim`` signed buckets, L2-normalised. Not a learned
+    embedding — just a fixed, reproducible text -> R^dim map so quoted
+    strings can be compared against vector columns."""
+    v = np.zeros(max(int(dim), 1), dtype=np.float32)
+    t = f"  {text.lower()}  "
+    for i in range(len(t) - 2):
+        h = zlib.crc32(t[i:i + 3].encode("utf-8"))
+        v[h % len(v)] += 1.0 if (h >> 16) & 1 else -1.0
+    n = float(np.linalg.norm(v))
+    return v / n if n else v
 
 
 def tokenize(sql: str) -> List[str]:
@@ -133,6 +161,55 @@ class _Parser:
             break
         return preds
 
+    def similarity_clause(self) -> Tuple[str, Any, bool]:
+        """``SIMILARITY(col, <[vector]|'text'>) [ASC|DESC]`` — returns
+        (col, query, ascending); DESC (nearest first) is the default."""
+        self.expect("SIMILARITY")
+        self.expect("(")
+        col = self.next()
+        self.expect(",")
+        if self.peek() == "[":
+            self.next()
+            vals: List[float] = []
+            while self.peek() != "]":
+                vals.append(float(self.literal()))
+                if self.peek() == ",":
+                    self.next()
+            self.expect("]")
+            query: Any = np.asarray(vals, dtype=np.float32)
+        else:
+            t = self.next()
+            if t[0] not in "'\"":
+                raise ValueError(
+                    "SIMILARITY query must be a [vector] literal or a "
+                    f"quoted text string, got {t!r}")
+            query = t[1:-1]
+        self.expect(")")
+        ascending = False
+        if self.at_kw("ASC"):
+            self.next()
+            ascending = True
+        elif self.at_kw("DESC"):
+            self.next()
+        return col, query, ascending
+
+    def order_limit(self) -> Tuple[Optional[Tuple[str, Any, bool]],
+                                   Optional[int]]:
+        order = None
+        if self.at_kw("ORDER"):
+            self.next()
+            self.expect("BY")
+            order = self.similarity_clause()
+        limit = None
+        if self.at_kw("LIMIT"):
+            self.next()
+            k = self.literal()
+            if not isinstance(k, int) or k < 1:
+                raise ValueError(f"LIMIT expects a positive integer, "
+                                 f"got {k!r}")
+            limit = k
+        return order, limit
+
     def select_item(self) -> SelectItem:
         t = self.next()
         up = t.upper()
@@ -200,9 +277,12 @@ class _Parser:
             self.next()
             self.expect("BY")
             group_by = self.next()
-        return self._build_select(items, table, preds, group_by)
+        order, limit = self.order_limit()
+        return self._build_select(items, table, preds, group_by,
+                                  order, limit)
 
-    def _build_select(self, items, table, preds, group_by) -> QueryStmt:
+    def _build_select(self, items, table, preds, group_by,
+                      order=None, limit=None) -> QueryStmt:
         plan = LogicalPlan.scan(table)
         tasks: List[str] = []
         score_of = {}               # (task, col) -> score column
@@ -245,6 +325,9 @@ class _Parser:
         if preds:
             plan.filter(preds)
         if has_agg:
+            if order is not None:
+                raise ValueError("ORDER BY SIMILARITY cannot be combined "
+                                 "with aggregates")
             if plain_cols and group_by is None:
                 raise ValueError("bare columns with aggregates require "
                                  "GROUP BY")
@@ -254,8 +337,22 @@ class _Parser:
             plan.agg(group_by, specs)
         elif group_by is not None:
             raise ValueError("GROUP BY without aggregates")
+        elif order is not None:
+            ocol, query, ascending = order
+            proj = list(out_cols)
+            drop = None
+            if ocol not in proj:
+                # ordering needs the column downstream of the projection;
+                # carry it through and drop it from the final output
+                proj.append(ocol)
+                drop = ocol
+            plan.project(proj)
+            plan.order_by_similarity(ocol, query, ascending=ascending,
+                                     drop_col=drop)
         else:
             plan.project(out_cols)      # SELECT list narrows the output
+        if limit is not None:
+            plan.limit(limit)
         return QueryStmt(plan, tasks=tasks, output_cols=out_cols)
 
     def predict_stmt(self) -> QueryStmt:
@@ -269,10 +366,18 @@ class _Parser:
         if self.at_kw("WHERE"):
             self.next()
             preds = self.where_clause()
+        order, limit = self.order_limit()
         plan = LogicalPlan.scan(table)
         plan.predict(task, col, out="_score")
         if preds:
             plan.filter(preds)
+        if order is not None:
+            # PREDICT keeps every column, so the ordering column is
+            # already in the output: nothing to drop
+            ocol, query, ascending = order
+            plan.order_by_similarity(ocol, query, ascending=ascending)
+        if limit is not None:
+            plan.limit(limit)
         return QueryStmt(plan, tasks=[task], output_cols=["_score"])
 
     def statement(self) -> Statement:

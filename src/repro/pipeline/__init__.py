@@ -18,8 +18,11 @@ from repro.pipeline.operators import (Batch, aggregate, batch_len,
                                       groupby_aggs, iter_chunks, join, scan,
                                       slice_batch, window_op)
 from repro.pipeline.scheduler import ExecStats, PipelineExecutor
-from repro.pipeline.share import (ShareStats, VectorShareCache, fingerprint,
-                                  fingerprint_rows, simd_normalize_embed)
+from repro.pipeline.share import (AnnConfig, AnnShareTier, AnnStats,
+                                  CacheChain, CacheTier, IvfFlatIndex,
+                                  ShareStats, TierLookup, VectorShareCache,
+                                  fingerprint, fingerprint_rows,
+                                  simd_normalize_embed)
 
 __all__ = [
     "AdmissionPolicy", "CircuitOpen", "LaneBreaker", "Rejected",
@@ -36,6 +39,8 @@ __all__ = [
     "Batch", "aggregate", "batch_len", "concat_batches", "filter_op",
     "groupby_agg", "groupby_aggs", "iter_chunks", "join", "scan",
     "slice_batch", "window_op", "ExecStats", "PipelineExecutor",
+    "AnnConfig", "AnnShareTier", "AnnStats", "CacheChain", "CacheTier",
+    "IvfFlatIndex", "TierLookup",
     "ShareStats", "VectorShareCache", "fingerprint", "fingerprint_rows",
     "simd_normalize_embed",
 ]

@@ -171,6 +171,12 @@ class DecoupledStore:
         self.cache_capacity_bytes = int(cache_capacity_bytes)
         self._layer_cache: "OrderedDict[Tuple[str, Optional[Tuple[int, int]]], np.ndarray]" = OrderedDict()
         self._cache_lock = threading.Lock()
+        # trunk pinning (serving integration): refcounted file paths the
+        # LRU must evict around — an active embed lane's trunk would be
+        # re-read immediately, so evicting it only adds disk churn
+        self._pin_count: Dict[str, int] = {}      # model_id -> pins
+        self._pin_paths: Dict[str, List[str]] = {}  # model_id -> files
+        self._pinned_paths: Dict[str, int] = {}   # file path -> refcount
         self.stats = StoreStats()
 
     def _dir(self, model_id: str) -> Path:
@@ -343,6 +349,92 @@ class DecoupledStore:
         # delta_of + own file = stored delta tensor (compose base + delta)
         return li.delta_of is not None and not li.file.startswith("@")
 
+    # -- trunk pinning + delta-aware eviction ------------------------------
+    def _layer_paths(self, model_id: str, li: LayerInfo) -> List[str]:
+        """Every concrete file a layer read touches: references follow
+        the chain to the defining file; a composed delta needs its delta
+        file *and* the base layer's files (composition re-reads both)."""
+        ref = self._ref_target(li)
+        if ref is not None:
+            return self._layer_paths(*ref)
+        out = [str(self._dir(model_id) / li.file)]
+        if self._is_composed_delta(li):
+            base_li = next(
+                (b for b in self.catalog.get_layers(li.delta_of)
+                 if b.layer_name == li.layer_name), None)
+            if base_li is not None:
+                out += self._layer_paths(li.delta_of, base_li)
+        return out
+
+    def pin_model(self, model_id: str, prefix: str = "trunk/") -> None:
+        """Pin a model's trunk layers (resolved through references and
+        delta composition, so a fine-tune pins the base files it
+        actually reads) against layer-cache eviction. Refcounted: every
+        ``pin_model`` needs a matching :meth:`unpin_model`. Raises
+        KeyError for a model the catalog doesn't know."""
+        self.catalog.get_model(model_id)          # KeyError if unknown
+        with self._cache_lock:
+            if model_id in self._pin_count:
+                self._pin_count[model_id] += 1
+                return
+            paths = sorted({
+                p for li in self.catalog.get_layers(model_id)
+                if li.layer_name.startswith(prefix)
+                for p in self._layer_paths(model_id, li)})
+            self._pin_count[model_id] = 1
+            self._pin_paths[model_id] = paths
+            for p in paths:
+                self._pinned_paths[p] = self._pinned_paths.get(p, 0) + 1
+
+    def unpin_model(self, model_id: str) -> None:
+        """Release one :meth:`pin_model` reference (no-op when the model
+        isn't pinned — a stop path may race a never-started lane)."""
+        with self._cache_lock:
+            if model_id not in self._pin_count:
+                return
+            self._pin_count[model_id] -= 1
+            if self._pin_count[model_id] > 0:
+                return
+            del self._pin_count[model_id]
+            for p in self._pin_paths.pop(model_id, []):
+                left = self._pinned_paths.get(p, 0) - 1
+                if left > 0:
+                    self._pinned_paths[p] = left
+                else:
+                    self._pinned_paths.pop(p, None)
+
+    def _is_pinned(self, path_str: str) -> bool:
+        return self._pinned_paths.get(path_str, 0) > 0
+
+    def _chain_members(self, model_id: str) -> set:
+        """The model plus every fine-tune whose base chain passes
+        through it — the entries whose cached tensors depend on this
+        model's files (the same traversal ``save`` uses to invalidate
+        stale composed tensors)."""
+        out, frontier = {model_id}, [model_id]
+        while frontier:
+            cur = frontier.pop()
+            for info in self.catalog.list_models():
+                if info.base_model == cur and info.model_id not in out:
+                    out.add(info.model_id)
+                    frontier.append(info.model_id)
+        return out
+
+    def _evict_chain_locked(self, victim_key) -> None:
+        """Evict a victim together with every unpinned cached tensor of
+        its delta chain (the victim's model + dependents composing
+        against it): once part of a chain's files must be re-read, keeping
+        the dependents' fragments only splits the chain's residency."""
+        owners = self._chain_members(Path(victim_key[0]).parent.name)
+        dirs = tuple(str(self._dir(m)) + os.sep for m in owners)
+        for k in [k for k in self._layer_cache
+                  if k == victim_key
+                  or (k[0].startswith(dirs) and not self._is_pinned(k[0]))]:
+            arr = self._layer_cache.pop(k)
+            self.stats.cache_bytes -= arr.nbytes
+            self.stats.cache_evictions += 1
+            self.stats.cache_evicted_bytes += arr.nbytes
+
     def _cache_get(self, key):
         if not self.cache_layers:
             return None
@@ -369,10 +461,15 @@ class DecoupledStore:
             self._layer_cache[key] = arr
             self.stats.cache_bytes += nbytes
             while self.stats.cache_bytes > cap and self._layer_cache:
-                _, victim = self._layer_cache.popitem(last=False)
-                self.stats.cache_bytes -= victim.nbytes
-                self.stats.cache_evictions += 1
-                self.stats.cache_evicted_bytes += victim.nbytes
+                # LRU victim selection skips pinned trunks (files an
+                # active serving lane holds); the victim's whole delta
+                # chain leaves with it
+                victim_key = next(
+                    (k for k in self._layer_cache
+                     if not self._is_pinned(k[0])), None)
+                if victim_key is None:
+                    break       # everything resident is pinned: stay over
+                self._evict_chain_locked(victim_key)
 
     def _read_layer_file(self, model_id: str, li: LayerInfo,
                          rows: Optional[Tuple[int, int]] = None):

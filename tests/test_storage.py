@@ -357,3 +357,123 @@ def test_cache_capacity_zero_disables_caching(tmp_path):
     ds.load("m")
     assert ds.stats.cache_hits == 0
     assert ds.stats.cache_bytes == 0
+
+
+# -- trunk pinning + delta-aware chain eviction ----------------------------
+
+def _trunk(rng, shift=0.0):
+    return {"trunk": {"W": rng.standard_normal((64, 64))
+                      .astype(np.float32) + shift}}
+
+
+def test_pin_model_protects_trunk_from_eviction(tmp_path):
+    """A pinned trunk survives LRU pressure that evicts its peers."""
+    rng = np.random.default_rng(0)
+    layer = rng.standard_normal((64, 64)).astype(np.float32)
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat,
+                        cache_capacity_bytes=2 * layer.nbytes + 512)
+    for i in range(4):
+        ds.save(f"m{i}", {"arch": "m"}, {"trunk": {"W": layer + i}})
+    ds.pin_model("m0")
+    ds.load("m0")
+    for i in range(1, 4):            # pressure: evicts m1/m2, never m0
+        ds.load(f"m{i}")
+    h0 = ds.stats.cache_hits
+    ds.load("m0")
+    assert ds.stats.cache_hits == h0 + 1     # pinned entry still resident
+    ds.unpin_model("m0")
+    assert not ds._pin_count
+    for i in range(1, 4):            # unpinned: m0 now evictable
+        ds.load(f"m{i}")
+    h1 = ds.stats.cache_hits
+    ds.load("m0")
+    assert ds.stats.cache_hits == h1         # miss: evicted after unpin
+
+
+def test_pin_model_refcounted_and_unknown_raises(tmp_path):
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat)
+    with pytest.raises(KeyError):
+        ds.pin_model("ghost")
+    rng = np.random.default_rng(1)
+    ds.save("m", {"arch": "m"}, _trunk(rng))
+    ds.pin_model("m")
+    ds.pin_model("m")
+    ds.unpin_model("m")
+    assert ds._pin_count["m"] == 1           # one reference still held
+    ds.unpin_model("m")
+    assert not ds._pin_count and not ds._pinned_paths
+    ds.unpin_model("m")                      # extra release is a no-op
+
+
+def test_pin_finetune_pins_base_files_it_reads(tmp_path):
+    """Pinning a delta fine-tune pins the base layer files composition
+    re-reads, so serving the variant keeps the whole read set warm."""
+    rng = np.random.default_rng(2)
+    base = _trunk(rng)
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat,
+                        cache_capacity_bytes=3 * base["trunk"]["W"].nbytes)
+    ds.save("base", {"arch": "m"}, base)
+    ds.save("ft", {"arch": "m"},
+            {"trunk": {"W": base["trunk"]["W"] + 1.0}}, base_model="base")
+    ds.pin_model("ft")
+    paths = ds._pin_paths["ft"]
+    assert any("/base/" in p for p in paths)      # base file pinned too
+    assert any("/ft/" in p for p in paths)        # delta file pinned
+    ds.load("ft")                                 # caches base + composed
+    for i in range(4):                            # heavy pressure
+        ds.save(f"x{i}", {"arch": "m"}, _trunk(rng, float(i)))
+        ds.load(f"x{i}")
+    h0 = ds.stats.cache_hits
+    ds.load("ft")
+    assert ds.stats.cache_hits > h0               # still warm under pin
+
+
+def test_delta_chain_evicts_together(tmp_path):
+    """Evicting a base layer takes its dependents' composed tensors in
+    the same step: a fine-tune fragment without its base must be
+    re-composed anyway, so keeping it only splits chain residency."""
+    rng = np.random.default_rng(3)
+    base = _trunk(rng)
+    nb = base["trunk"]["W"].nbytes
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat,
+                        cache_capacity_bytes=3 * nb + 512)
+    ds.save("base", {"arch": "m"}, base)
+    ds.save("ft", {"arch": "m"},
+            {"trunk": {"W": base["trunk"]["W"] + 1.0}}, base_model="base")
+    ds.load("ft")                    # resident: base layer + composed ft
+    assert len(ds._layer_cache) == 2
+    ds.save("m2", {"arch": "m"}, _trunk(rng, 9.0))
+    ds.save("m3", {"arch": "m"}, _trunk(rng, 7.0))
+    ds.load("m2")
+    ds.load("m3")                    # over cap: LRU victim is base's file
+    assert all("/base/" not in k[0] and "/ft/" not in k[0]
+               for k in ds._layer_cache)  # chain left together
+    h0 = ds.stats.cache_hits
+    ds.load("ft")                    # cold: both members re-read
+    assert ds.stats.cache_hits == h0
+
+
+def test_all_pinned_cache_stays_over_cap(tmp_path):
+    """When every resident tensor is pinned the LRU has no victim: the
+    cache rides over capacity rather than evicting an active trunk."""
+    rng = np.random.default_rng(4)
+    a, b = _trunk(rng), _trunk(rng, 1.0)
+    nb = a["trunk"]["W"].nbytes
+    cat = Catalog(tmp_path / "cat")
+    ds = DecoupledStore(tmp_path / "dec", cat,
+                        cache_capacity_bytes=nb + nb // 2)
+    ds.save("a", {"arch": "m"}, a)
+    ds.save("b", {"arch": "m"}, b)
+    ds.pin_model("a")
+    ds.pin_model("b")
+    ds.load("a")
+    ds.load("b")
+    assert ds.stats.cache_bytes > ds.cache_capacity_bytes
+    h0 = ds.stats.cache_hits
+    ds.load("a")
+    ds.load("b")
+    assert ds.stats.cache_hits == h0 + 2
