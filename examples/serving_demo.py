@@ -16,6 +16,15 @@ plus three head-delta variants registered via
 embed lane — the trunk is staged once and only the small per-head delta
 bytes are read from disk (see docs/serving.md):
   PYTHONPATH=src python examples/serving_demo.py --delta
+
+With ``--workers N`` the same traffic runs through the multi-process
+dispatch tier instead: a ``DispatchServer`` front door spawns N worker
+processes over the shared store, routes coalesced batches to them as
+leases, and keeps each trunk on as few workers as its load needs
+(``--delta --workers 2`` shows the whole fleet staged on one worker's
+shared embed lane). The stats dump covers placement, leases, and the
+per-worker aggregates (see docs/serving.md "Dispatch tier"):
+  PYTHONPATH=src python examples/serving_demo.py --workers 2 --delta
 """
 import argparse
 import threading
@@ -24,12 +33,12 @@ import numpy as np
 
 from repro.core import (ModelSelector, TaskFeaturizer, build_tasks,
                         build_zoo, make_task, transfer_matrix)
-from repro.engine import MorphingServer, MorphingSession
+from repro.engine import DispatchServer, MorphingServer, MorphingSession
 
 N_FINETUNES = 3
 
 
-def main(delta: bool = False) -> None:
+def main(delta: bool = False, workers: int = 0) -> None:
     zoo = build_zoo(16, seed=0)
     history = build_tasks(32, seed=1)
     V = transfer_matrix(zoo, history)
@@ -49,7 +58,12 @@ def main(delta: bool = False) -> None:
         "TYPE='Classification');"))
     sample = make_task(rng, "gauss", n=128, dim=16, classes=3)
 
-    server = MorphingServer(session=sess, max_wait_s=0.005)
+    if workers:
+        # front door + N worker processes over the shared store root
+        server = DispatchServer(session=sess, workers=workers,
+                                max_wait_s=0.005)
+    else:
+        server = MorphingServer(session=sess, max_wait_s=0.005)
     # partial-load resolution ahead of traffic: the slice is keyed to
     # the sample's width, which matches the reviews.emb schema here
     server.resolve_task("sentiment", sample.X, sample.y, mode="partial")
@@ -89,24 +103,37 @@ def main(delta: bool = False) -> None:
             t.start()
         for t in threads:
             t.join()
+        st = server.stats()          # workers answer while still alive
 
-    st = server.stats()
     rm = sess.models["sentiment"]
     print(f"(system resolved sentiment -> {rm.model_id}, "
           f"{rm.store} store, mode={rm.load_mode})")
-    print(f"served {st.requests} requests / {st.rows} rows in "
-          f"{st.batches} batches (x{st.mean_coalesced:.1f} coalesced)")
-    print(f"latency p50={st.p50_latency_s * 1e3:.1f}ms "
-          f"p95={st.p95_latency_s * 1e3:.1f}ms; "
-          f"{st.rows_per_second:.0f} rows/s inference")
-    print(f"partial load: {st.loaded_bytes}B read of "
-          f"{st.stored_bytes}B stored")
-    if delta:
-        print(f"delta fleet: {len(tasks)} tasks over {st.lanes} embed "
-              f"lane(s) {st.tasks_by_lane}; {st.delta_tasks} fine-tunes "
-              f"read {st.delta_loaded_bytes}B "
-              f"({st.delta_stored_bytes}B of deltas on disk); "
+    if workers:
+        print(f"dispatch tier: {st.alive_workers}/{st.workers} workers, "
+              f"{st.requests} requests / {st.rows} rows over "
+              f"{st.leases} leases "
+              f"(redispatches={st.redispatches}, "
+              f"scale out/in={st.scale_outs}/{st.scale_ins})")
+        print(f"placement: replicas {st.replicas_by_trunk}; "
+              f"staged bytes by worker {st.staged_bytes_by_worker}")
+        print(f"front latency p50={st.p50_latency_s * 1e3:.1f}ms "
+              f"p95={st.p95_latency_s * 1e3:.1f}ms; "
+              f"{st.rows_per_second:.0f} rows/s worker inference; "
               f"share hit rate {st.share_hit_rate:.2f}")
+    else:
+        print(f"served {st.requests} requests / {st.rows} rows in "
+              f"{st.batches} batches (x{st.mean_coalesced:.1f} coalesced)")
+        print(f"latency p50={st.p50_latency_s * 1e3:.1f}ms "
+              f"p95={st.p95_latency_s * 1e3:.1f}ms; "
+              f"{st.rows_per_second:.0f} rows/s inference")
+        print(f"partial load: {st.loaded_bytes}B read of "
+              f"{st.stored_bytes}B stored")
+        if delta:
+            print(f"delta fleet: {len(tasks)} tasks over {st.lanes} embed "
+                  f"lane(s) {st.tasks_by_lane}; {st.delta_tasks} "
+                  f"fine-tunes read {st.delta_loaded_bytes}B "
+                  f"({st.delta_stored_bytes}B of deltas on disk); "
+                  f"share hit rate {st.share_hit_rate:.2f}")
     one = results[(0, 0)]
     print(f"(request {one.req_id}: {one.rows} rows, "
           f"mean score {one.scores.mean():+.4f})")
@@ -118,4 +145,9 @@ if __name__ == "__main__":
                     help="serve a fine-tune fleet (base + "
                          f"{N_FINETUNES} head-delta variants) through "
                          "one shared embed lane")
-    main(delta=ap.parse_args().delta)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="route through the multi-process dispatch tier "
+                         "with N worker processes (0 = in-process "
+                         "MorphingServer)")
+    args = ap.parse_args()
+    main(delta=args.delta, workers=args.workers)

@@ -4,6 +4,8 @@ the selection subspace + storage catalog and pre-embedding via the
 vector-share cache. `MorphingSession` is the single entry point.
 """
 from repro.engine.config import EngineConfig
+from repro.engine.dispatch import (DispatchServer, DispatchStats,
+                                   PlacementPolicy)
 from repro.engine.plan import (CompileContext, LogicalPlan, PlanNode,
                                annotate_plan, compile_plan, insert_embeds,
                                lower_similarity, optimize,
@@ -20,6 +22,7 @@ from repro.pipeline.share import (AnnConfig, AnnShareTier, CacheChain,
 
 __all__ = [
     "EngineConfig",
+    "DispatchServer", "DispatchStats", "PlacementPolicy",
     "CompileContext", "LogicalPlan", "PlanNode", "annotate_plan",
     "compile_plan", "insert_embeds", "lower_similarity", "optimize",
     "push_down_filters",

@@ -42,13 +42,22 @@ class EngineConfig:
     ``("exact", "ann")`` appends the opt-in approximate tier
     (:class:`repro.pipeline.share.AnnShareTier`) configured by ``ann``.
     ``policy`` is the serving admission policy (ignored by plain
-    sessions)."""
+    sessions).
+
+    ``calib_memo_path`` opts fast auto-calibration into an on-disk memo
+    (JSON) keyed by a host/backend/device-count fingerprint, so N worker
+    processes and repeated CI legs stop re-paying the two-point probe;
+    entries go stale — and re-probe — when the jax version or device
+    count changes (the fingerprint embeds both). ``workers`` doubles as
+    the dispatch tier's default worker-process count
+    (:class:`repro.engine.dispatch.DispatchServer`)."""
 
     model_store: str = "blob"
     backend: str = "auto"
     devices: Tuple[str, ...] = ("host", "tpu")
     device_count: int = 1
     auto_calibrate: bool = True
+    calib_memo_path: Optional[str] = None
     enable_share: bool = True
     share_capacity_bytes: int = 1 << 30
     cache_tiers: Tuple[str, ...] = ("exact",)

@@ -353,6 +353,38 @@ class MorphingServer:
                 "(wedged backend?) — results for their pending requests "
                 "will not arrive")
 
+    def unstage_trunk(self, key: str, *,
+                      timeout: Optional[float] = None) -> bool:
+        """Tear down one trunk lane (the dispatch tier's scale-in path):
+        drain and join its batcher, release the member tasks' store
+        pins, and evict the staged weights from every backend. The tasks
+        stay resolved — the next submit for one of them rebuilds the
+        lane, re-staging the trunk (Eq. 7 paid again, by design).
+        Returns False when no lane with that key exists. Callers should
+        quiesce traffic for the trunk first; the drain serves whatever
+        is still queued."""
+        with self._lock:
+            lane = self._lanes.pop(key, None)
+            if lane is None:
+                return False
+            tasks = [t for t, ln in list(self._lane_of_task.items())
+                     if ln is lane]
+            for t in tasks:
+                self._lane_of_task.pop(t, None)
+        lane.batcher.stop(drain=True,
+                          timeout=(self.stop_timeout_s
+                                   if timeout is None else timeout))
+        for b in {id(b): b for b in
+                  self.session.backends.values()}.values():
+            b.unstage(lane.spec.version)
+        with self._lock:
+            for t in tasks:
+                rm = self.session.models.get(t)
+                if rm is not None and rm.model_id in self._pins:
+                    self._pins.remove(rm.model_id)
+                    self.session.dstore.unpin_model(rm.model_id)
+        return True
+
     def __enter__(self) -> "MorphingServer":
         return self.start()
 
@@ -614,25 +646,44 @@ class MorphingServer:
         (the lane "restarts" and the request is admitted)."""
         validate_priority(priority)
         task, col, table, preds = self._parse_predict(sql)
-        if not self._running:
-            raise RuntimeError(
-                "server not started: call start() or use 'with server:'")
         if task not in self.session.models:
+            if not self._running:
+                raise RuntimeError(
+                    "server not started: call start() or use "
+                    "'with server:'")
             if sample is None:
                 raise RuntimeError(
                     f"task {task} unresolved and no sample given")
             self.resolve_task(task, *sample)
+        return self.submit_rows(task, self._rows_for(table, col, preds),
+                                priority=priority, deadline_ms=deadline_ms)
+
+    def submit_rows(self, task: str, X: np.ndarray, *,
+                    priority: str = "batch",
+                    deadline_ms: Optional[float] = None) -> int:
+        """Admit pre-selected rows for an already-resolved task — the
+        row-level entry the dispatch tier's workers use (the front door
+        parsed the SQL and snapshotted the window before shipping the
+        rows over). Identical admission semantics to :meth:`submit`:
+        priority classes, deadlines, breaker supervision, and
+        Rejected/CircuitOpen backpressure."""
+        validate_priority(priority)
+        if not self._running:
+            raise RuntimeError(
+                "server not started: call start() or use 'with server:'")
+        if task not in self.session.models:
+            raise RuntimeError(
+                f"task {task} unresolved; resolve_task() it first")
         lane = self._lane_for(task)
         # supervisor: an open breaker whose cooldown elapsed is closed
         # here, so the first post-cooldown submit restarts the lane
         # instead of requiring an operator action
         lane.batcher.reset_breaker()
-        X = self._rows_for(table, col, preds)
         req_id = next(self._ids)
         # bookkeeping only after a successful admission (submit raises
         # when racing a stop()); counter writes go under the lane lock
         lane.batcher.submit(Request(
-            req_id, (task, X), priority=priority,
+            req_id, (task, np.asarray(X)), priority=priority,
             deadline_s=(deadline_ms / 1000.0
                         if deadline_ms is not None else None)))
         self._task_of[req_id] = task

@@ -40,6 +40,19 @@ PRIORITIES: Tuple[str, ...] = (INTERACTIVE, BATCH, BEST_EFFORT)
 DEFAULT_WEIGHTS: Dict[str, int] = {INTERACTIVE: 8, BATCH: 3, BEST_EFFORT: 1}
 
 
+def _rebuild_error(cls, args, state):
+    """Reconstruct a typed admission error from (class, args, attrs).
+
+    The default exception pickling replays ``cls(*args)``, which loses
+    every keyword-only field (lane, priority, reason, ...). These errors
+    cross the dispatch tier's process boundary, so they rebuild from the
+    message args plus the full attribute dict instead."""
+    err = cls.__new__(cls)
+    RuntimeError.__init__(err, *args)
+    err.__dict__.update(state)
+    return err
+
+
 class Rejected(RuntimeError):
     """Typed admission failure: the lane's queue-depth cap (or its
     block-timeout) pushed back. Carries enough context for the caller
@@ -54,6 +67,9 @@ class Rejected(RuntimeError):
         self.queued_units = queued_units
         self.cap = cap
         self.reason = reason
+
+    def __reduce__(self):
+        return _rebuild_error, (type(self), self.args, dict(self.__dict__))
 
 
 class CircuitOpen(Rejected):
@@ -82,6 +98,9 @@ class RequestError(RuntimeError):
         self.lane = lane
         self.attempts = attempts
         self.req_ids = tuple(req_ids)
+
+    def __reduce__(self):
+        return _rebuild_error, (type(self), self.args, dict(self.__dict__))
 
 
 @dataclass(frozen=True)

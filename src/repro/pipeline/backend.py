@@ -79,6 +79,13 @@ class ExecutionBackend:
         Idempotent per version; called once at resolve time."""
         return zoo_model
 
+    def unstage(self, version: str) -> bool:
+        """Release staged device state for one trunk identity (the
+        dispatch tier's scale-in path). Idempotent; returns True when
+        something was actually evicted. Host backends keep no staged
+        state, so the base implementation is a no-op."""
+        return False
+
     # -- node dispatch ----------------------------------------------------
     def run_node(self, node, inputs: List[Any]) -> Any:
         spec = node.meta.get("infer") if node.meta else None
@@ -316,6 +323,14 @@ class JaxBackend(ExecutionBackend):
                 self._staged[version] = staged
                 self.stage_count += 1
         return self._staged[version]
+
+    def unstage(self, version: str) -> bool:
+        """Drop the staged weights + compiled functions for one version.
+        A later request for the same version late-stages transparently
+        through :meth:`_staged_for` (paying Eq. 7 again, by design —
+        this is the dispatch tier's scale-in path)."""
+        with self._lock:
+            return self._staged.pop(version, None) is not None
 
     @property
     def compile_count(self) -> int:

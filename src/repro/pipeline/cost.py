@@ -403,3 +403,69 @@ class _CalibModel:
         self.zoo_model = zm
         self.features = zm.features
         self.head = lambda F: F.mean(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# On-disk calibration memo: share probe results across processes and runs
+# ---------------------------------------------------------------------------
+
+def profile_memo_fingerprint(parts) -> str:
+    """Host/backend/device-count identity of one calibration memo entry.
+
+    The key *is* the staleness guard: jax-flavoured backends embed the
+    jax version and live device count, host-only ones the cpu count, so
+    an upgrade or a different device topology simply misses the memo and
+    re-probes. Backends that never touch jax deliberately don't import
+    it here — spawned numpy workers stay jax-free."""
+    import os
+    import platform
+    toks = [platform.node() or "host"]
+    toks += [str(p) for p in parts if p is not None]
+    if any("jax" in t for t in toks[1:]):
+        try:
+            import jax
+            toks.append(f"jax={jax.__version__}")
+            toks.append(f"jaxdev={jax.device_count()}")
+        except Exception:  # pragma: no cover - jax import failure
+            toks.append("jax=unavailable")
+    else:
+        toks.append(f"cpus={os.cpu_count()}")
+    return "|".join(toks)
+
+
+def load_profile_memo(path) -> Dict[str, HardwareProfile]:
+    """Read an on-disk calibration memo ({fingerprint: profile fields}).
+    Unreadable files and schema-drifted entries read as empty/stale —
+    the caller just re-probes."""
+    import json
+    from pathlib import Path
+    try:
+        raw = json.loads(Path(path).read_text())
+    except (OSError, ValueError):
+        return {}
+    if not isinstance(raw, dict):
+        return {}
+    out: Dict[str, HardwareProfile] = {}
+    for fp, fields in raw.items():
+        try:
+            out[fp] = HardwareProfile(**fields)
+        except TypeError:
+            continue                       # schema drift: treat as stale
+    return out
+
+
+def store_profile_memo(path, fingerprint: str, prof: HardwareProfile) -> None:
+    """Merge one measured profile into the on-disk memo. Atomic replace;
+    concurrent workers race benignly (last writer wins with equivalent
+    measurements for the same fingerprint)."""
+    import dataclasses as _dc
+    import json
+    import os
+    from pathlib import Path
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    memo = {fp: _dc.asdict(p) for fp, p in load_profile_memo(path).items()}
+    memo[fingerprint] = _dc.asdict(prof)
+    tmp = path.with_name(f"{path.name}.tmp{os.getpid()}")
+    tmp.write_text(json.dumps(memo, indent=1, sort_keys=True))
+    tmp.replace(path)

@@ -81,6 +81,16 @@ class Catalog:
             indent=1))
         tmp.replace(self._layers_file)
 
+    def reload(self) -> None:
+        """Re-read the catalog tables from disk. Long-lived readers in
+        other processes (dispatch-tier workers) call this before
+        resolving a model that another process may have registered after
+        this catalog was constructed."""
+        with self._lock:
+            self._models = {}
+            self._layers = {}
+            self._load()
+
     # -- API ----------------------------------------------------------------
     def register_model(self, info: ModelInfo) -> None:
         with self._lock:
