@@ -56,6 +56,14 @@ class EngineConfig:
     backend: str = "auto"
     devices: Tuple[str, ...] = ("host", "tpu")
     device_count: int = 1
+    # decoupled-store compression (docs/architecture.md): sparse/quantized
+    # fine-tune deltas and content-hashed tensor-page dedup. Off by
+    # default — both change on-disk layout (reads stay transparent).
+    compress_deltas: bool = False
+    quant_dtype: str = "int8"            # code width for dense residuals
+    sparse_eps: float = 0.0              # |delta| <= eps sparsified away
+    dedup_pages: bool = False
+    page_bytes: int = 64 << 10
     auto_calibrate: bool = True
     calib_memo_path: Optional[str] = None
     enable_share: bool = True
@@ -84,6 +92,15 @@ class EngineConfig:
         if self.device_count < 1:
             raise ValueError(
                 f"device_count must be >= 1, got {self.device_count}")
+        if self.quant_dtype not in ("int8", "int16"):
+            raise ValueError(
+                f"quant_dtype must be int8|int16, got {self.quant_dtype!r}")
+        if self.sparse_eps < 0:
+            raise ValueError(
+                f"sparse_eps must be >= 0, got {self.sparse_eps}")
+        if self.page_bytes < 1:
+            raise ValueError(
+                f"page_bytes must be >= 1, got {self.page_bytes}")
         return self
 
     def overlaid(self, overrides: Dict[str, Any]) -> "EngineConfig":

@@ -136,6 +136,12 @@ class ServerStats:
     delta_loaded_bytes: int = 0      # disk bytes their resolutions read
     #                                # (≈ K·delta when the base is warm)
     delta_stored_bytes: int = 0      # their delta layers' bytes on disk
+    # storage-compression gauges (session-lifetime DecoupledStore stats;
+    # docs/architecture.md "Compressed deltas & tensor-page dedup")
+    dedup_pages: int = 0             # page writes elided by content dedup
+    dedup_bytes_saved: int = 0       # bytes those elided writes would cost
+    compressed_delta_bytes: int = 0  # on-disk bytes of compressed deltas
+    quant_error_bound: float = 0.0   # max declared quant bound in play
     # admission / robustness layer (populated when the server carries an
     # AdmissionPolicy; zeros otherwise) — docs/serving.md "Admission &
     # SLOs" documents every field
@@ -822,6 +828,11 @@ class MorphingServer:
                         st.delta_tasks += 1
                         st.delta_loaded_bytes += rm.loaded_bytes
                         st.delta_stored_bytes += rm.delta_bytes
+        sstats = self.session.dstore.stats
+        st.dedup_pages = sstats.dedup_pages
+        st.dedup_bytes_saved = sstats.dedup_bytes_saved
+        st.compressed_delta_bytes = sstats.compressed_delta_bytes
+        st.quant_error_bound = sstats.quant_error_bound
         return st
 
     def health(self) -> Dict[str, Dict]:

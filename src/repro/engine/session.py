@@ -142,6 +142,12 @@ class QueryReport:
     stored_bytes: int = 0           # model bytes the store holds
     delta_bytes: int = 0            # fine-tune delta bytes among the
     #                               # resolutions this query touched
+    # storage-compression gauges (session-lifetime DecoupledStore stats,
+    # docs/architecture.md "Compressed deltas & tensor-page dedup"):
+    dedup_pages: int = 0            # page writes elided by content dedup
+    dedup_bytes_saved: int = 0      # bytes those elided writes would cost
+    compressed_delta_bytes: int = 0  # on-disk bytes of compressed deltas
+    quant_error_bound: float = 0.0  # max declared quant bound in play
 
     @property
     def share_hit_rate(self) -> float:
@@ -262,7 +268,13 @@ class MorphingSession:
             tempfile.mkdtemp(prefix="morphingdb-"))
         self.catalog = Catalog(self.root / "catalog")
         self.blobs = BlobStore(self.root / "models", self.catalog)
-        self.dstore = DecoupledStore(self.root / "layers", self.catalog)
+        self.dstore = DecoupledStore(
+            self.root / "layers", self.catalog,
+            compress_deltas=cfg.compress_deltas,
+            quant_dtype=cfg.quant_dtype,
+            sparse_eps=cfg.sparse_eps,
+            dedup_pages=cfg.dedup_pages,
+            page_bytes=cfg.page_bytes)
         self.model_store = cfg.model_store
         self.share = VectorShareCache(
             self.root / "share", capacity_bytes=cfg.share_capacity_bytes)
@@ -580,8 +592,13 @@ class MorphingSession:
             if base_fp:
                 base_fp = f"{base_fp}+w{width_limit}"
         delta_b = self.dstore.delta_bytes(model_id) if base_id else 0
-        prof = profile_for_model(n_params=float(info.param_count),
-                                 bytes_per_row=in_dim_full * 4)
+        prof = profile_for_model(
+            n_params=float(info.param_count),
+            bytes_per_row=in_dim_full * 4,
+            # compressed deltas / deduped pages shrink what a cold
+            # resolve reads off disk; Eq. 7's host mem term charges the
+            # on-disk bytes, the link term the full dequantized model
+            stored_bytes=float(self.dstore.cold_resolve_bytes(model_id)))
 
         def trunk_resident(m: ResolvedModel) -> bool:
             # a head-mode resolution whose lazy trunk never materialized
@@ -865,6 +882,11 @@ class MorphingSession:
             report.loaded_bytes += m.loaded_bytes
             report.stored_bytes += m.stored_bytes
             report.delta_bytes += m.delta_bytes
+        sstats = self.dstore.stats
+        report.dedup_pages = sstats.dedup_pages
+        report.dedup_bytes_saved = sstats.dedup_bytes_saved
+        report.compressed_delta_bytes = sstats.compressed_delta_bytes
+        report.quant_error_bound = sstats.quant_error_bound
         for st in ctx.batcher_stats.values():
             report.batch_batches += st.batches
             report.batch_rows += st.rows

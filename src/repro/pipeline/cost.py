@@ -102,6 +102,16 @@ class OpProfile:
     bytes_per_row: float = 0.0
     model_bytes: float = 0.0       # weights to stage (0 for relational ops)
     api_latency_s: float = 0.0     # >0 => remote model
+    # on-disk bytes a cold resolve reads (compressed deltas / deduped
+    # pages make this < model_bytes; 0 = uncompressed, same as
+    # model_bytes). The Eq. 7/9 host mem-read term charges these bytes —
+    # decompression happens at memory speed — while the host->device
+    # link still moves the full dequantized model_bytes.
+    stored_model_bytes: float = 0.0
+
+    @property
+    def cold_read_bytes(self) -> float:
+        return self.stored_model_bytes or self.model_bytes
 
 
 def exec_time(p: OpProfile, nrows: int, device: str,
@@ -120,11 +130,12 @@ def trans_cost(p: OpProfile, nrows: int, device: str,
         return 0.0
     host = _hw_for("host", hw)
     if device == "host":
-        return p.model_bytes / host.mem_bw  # Eq. 9
+        return p.cold_read_bytes / host.mem_bw  # Eq. 9
     h = _hw_for(device, hw)
-    # stage weights + move batch over the host<->device link (Eq. 7)
+    # read (possibly compressed) weights from host storage, then stage
+    # the full model + batch over the host<->device link (Eq. 7)
     batch_bytes = p.bytes_per_row * nrows
-    return (p.model_bytes / host.mem_bw
+    return (p.cold_read_bytes / host.mem_bw
             + (p.model_bytes + batch_bytes) / h.link_bw
             + h.launch_latency_s)
 
@@ -265,11 +276,15 @@ class DynamicBudget:
 
 def profile_for_model(n_params: float, bytes_per_row: float,
                       flops_per_row: Optional[float] = None,
-                      dtype_bytes: int = 4) -> OpProfile:
+                      dtype_bytes: int = 4,
+                      stored_bytes: Optional[float] = None) -> OpProfile:
+    """``stored_bytes`` is the on-disk size a cold resolve actually reads
+    (compressed deltas, deduped pages); omit it for uncompressed models."""
     return OpProfile(
         flops_per_row=flops_per_row if flops_per_row else 2.0 * n_params,
         bytes_per_row=bytes_per_row,
-        model_bytes=n_params * dtype_bytes)
+        model_bytes=n_params * dtype_bytes,
+        stored_model_bytes=float(stored_bytes or 0.0))
 
 
 def split_profile(p: OpProfile, head_dim: int,
@@ -288,7 +303,8 @@ def split_profile(p: OpProfile, head_dim: int,
         flops_per_row=max(p.flops_per_row - head_flops, 1.0),
         bytes_per_row=p.bytes_per_row,
         model_bytes=p.model_bytes,
-        api_latency_s=p.api_latency_s)
+        api_latency_s=p.api_latency_s,
+        stored_model_bytes=p.stored_model_bytes)
     return embed, head
 
 

@@ -39,6 +39,8 @@ class LayerInfo:
     nbytes: int
     file: str                            # Mvec file relative to table dir
     delta_of: Optional[str] = None       # fine-tune delta base layer
+    enc: str = "dense"                   # payload encoding on disk
+    bound: float = 0.0                   # declared max abs reconstruction err
 
 
 class Catalog:

@@ -27,6 +27,8 @@ import io
 import json
 import os
 import pickle
+import shutil
+import struct
 import threading
 import time
 import zlib
@@ -131,6 +133,120 @@ class StoreStats:
     cache_bytes: int = 0         # tensor bytes currently held (gauge)
     delta_composes: int = 0      # base+delta compositions performed
     delta_bytes: int = 0         # delta bytes (subset of loaded_bytes)
+    dedup_pages: int = 0         # page writes elided (content already stored)
+    dedup_bytes_saved: int = 0   # bytes those elided page writes would cost
+    compressed_delta_bytes: int = 0  # on-disk bytes of compressed delta files
+    quant_error_bound: float = 0.0   # max declared quant bound seen (gauge)
+
+
+class PageStore:
+    """Content-hashed, refcounted tensor pages (NeurStore-style dedup).
+
+    Layer payloads are chunked into fixed-size pages keyed by the sha256
+    of their content; identical trunk pages across zoo models and
+    fine-tune chains are stored once. Refcounts persist in a JSON
+    sidecar updated atomically; ``decref`` only drops the count (the
+    page file stays on disk until :meth:`vacuum` collects orphans), so a
+    crash between a decref and a vacuum can never lose referenced data —
+    the failure mode is garbage, which the next vacuum removes.
+    """
+
+    REFS_FILE = "_refcounts.json"
+
+    def __init__(self, root: Path, page_bytes: int = 64 << 10):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.page_bytes = int(page_bytes)
+        self._lock = threading.Lock()
+        self._refs: Dict[str, int] = {}
+        refs_path = self.root / self.REFS_FILE
+        if refs_path.exists():
+            self._refs = {k: int(v) for k, v in
+                          json.loads(refs_path.read_text()).items()}
+
+    def _page_path(self, hex_digest: str) -> Path:
+        return self.root / f"{hex_digest}.page"
+
+    def _flush_locked(self) -> None:
+        tmp = self.root / (self.REFS_FILE + ".tmp")
+        tmp.write_text(json.dumps(self._refs, indent=0))
+        tmp.replace(self.root / self.REFS_FILE)
+
+    def chunk_digests(self, data: bytes) -> List[bytes]:
+        return [hashlib.sha256(data[i:i + self.page_bytes]).digest()
+                for i in range(0, len(data), self.page_bytes)] if data \
+            else []
+
+    def put(self, data: bytes) -> Tuple[List[bytes], int, int]:
+        """Store a payload's pages and take one reference on each.
+        Returns ``(digests, dup_pages, dup_bytes)`` — the dedup counters
+        tell how many page writes were elided because the content was
+        already stored (by this model or any other)."""
+        digests: List[bytes] = []
+        dup_pages = dup_bytes = 0
+        with self._lock:
+            for off in range(0, len(data), self.page_bytes):
+                chunk = data[off:off + self.page_bytes]
+                dg = hashlib.sha256(chunk).digest()
+                digests.append(dg)
+                hexd = dg.hex()
+                path = self._page_path(hexd)
+                if hexd in self._refs and path.exists():
+                    dup_pages += 1
+                    dup_bytes += len(chunk)
+                else:
+                    tmp = path.with_suffix(".tmp")
+                    tmp.write_bytes(chunk)
+                    tmp.replace(path)
+                self._refs[hexd] = self._refs.get(hexd, 0) + 1
+            self._flush_locked()
+        return digests, dup_pages, dup_bytes
+
+    def incref(self, digests) -> None:
+        with self._lock:
+            for dg in digests:
+                self._refs[dg.hex()] = self._refs.get(dg.hex(), 0) + 1
+            self._flush_locked()
+
+    def decref(self, digests) -> None:
+        with self._lock:
+            for dg in digests:
+                hexd = dg.hex()
+                left = self._refs.get(hexd, 0) - 1
+                if left > 0:
+                    self._refs[hexd] = left
+                else:
+                    self._refs.pop(hexd, None)
+            self._flush_locked()
+
+    def refcount(self, digest: bytes) -> int:
+        with self._lock:
+            return self._refs.get(digest.hex(), 0)
+
+    def read_page(self, digest: bytes) -> bytes:
+        return self._page_path(digest.hex()).read_bytes()
+
+    def page_size_on_disk(self, digest: bytes) -> int:
+        path = self._page_path(digest.hex())
+        return path.stat().st_size if path.exists() else 0
+
+    def total_bytes(self) -> int:
+        return sum(p.stat().st_size for p in self.root.glob("*.page"))
+
+    def vacuum(self) -> Tuple[int, int]:
+        """GC orphaned pages: remove every ``*.page`` file whose digest
+        holds no reference. Returns ``(pages_removed, bytes_freed)``.
+        Referenced pages are never touched."""
+        removed = freed = 0
+        with self._lock:
+            for path in list(self.root.glob("*.page")):
+                if path.stem not in self._refs:
+                    freed += path.stat().st_size
+                    path.unlink()
+                    removed += 1
+            for path in self.root.glob("*.tmp"):   # crash leftovers
+                path.unlink()
+        return removed, freed
 
 
 class DecoupledStore:
@@ -155,15 +271,49 @@ class DecoupledStore:
     reuse), and a fine-tune resolved after its base pays only delta
     bytes of disk I/O (the warm-base accounting Eq. 7 staging relies
     on). Composed delta layers are cached under the delta file's path.
+
+    Two opt-in compression layers shrink the stored zoo without changing
+    what any read returns:
+
+    - ``compress_deltas=True``: fine-tune residuals are stored sparse
+      (CSR index+value, exact) when few entries changed, or int8/int16
+      quantized (``quant_dtype``) when dense — whichever is smallest;
+      raw wins ties so integer deltas and adversarial floats stay
+      bit-exact. Every compressed file declares its max abs
+      reconstruction error (0 for sparse/integer payloads,
+      ``scale/2`` for quantized ones), surfaced as the
+      ``quant_error_bound`` stats gauge.
+    - ``dedup_pages=True``: plain (non-delta) layer payloads are chunked
+      into content-hashed pages in a refcounted :class:`PageStore`
+      (``_pages/`` beside the model dirs), so identical trunk pages
+      across models store once. ``save``/``delete`` manage refcounts;
+      :meth:`vacuum` collects orphaned pages.
+
+    Both compose transparently through every read path — width slices,
+    base+delta composition, chained fine-tunes, the layer LRU, pinning.
     """
 
     def __init__(self, root: Path, catalog: Optional[Catalog] = None,
                  cache_layers: bool = True,
-                 cache_capacity_bytes: int = 256 << 20):
+                 cache_capacity_bytes: int = 256 << 20,
+                 compress_deltas: bool = False,
+                 quant_dtype: str = "int8",
+                 sparse_eps: float = 0.0,
+                 dedup_pages: bool = False,
+                 page_bytes: int = 64 << 10):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.catalog = catalog or Catalog(self.root / "_catalog")
         self.cache_layers = cache_layers
+        if quant_dtype not in ("int8", "int16"):
+            raise ValueError(f"quant_dtype must be int8|int16, "
+                             f"got {quant_dtype!r}")
+        self.compress_deltas = bool(compress_deltas)
+        self.quant_dtype = quant_dtype
+        self.sparse_eps = float(sparse_eps)
+        self.dedup_pages = bool(dedup_pages)
+        self.page_bytes = int(page_bytes)
+        self._page_store: Optional[PageStore] = None
         # byte-capped LRU: a long-lived session resolving many models
         # (a delta fleet's composed trunks, analytics over a wide zoo)
         # must not grow the cross-model tensor cache without bound.
@@ -181,6 +331,67 @@ class DecoupledStore:
 
     def _dir(self, model_id: str) -> Path:
         return self.root / model_id
+
+    @property
+    def pages(self) -> PageStore:
+        """The shared page store (created on first use; an existing
+        ``_pages/`` dir is picked up even when ``dedup_pages`` is off,
+        so a reader store can resolve paged layers a writer produced)."""
+        if self._page_store is None:
+            self._page_store = PageStore(self.root / "_pages",
+                                         self.page_bytes)
+        return self._page_store
+
+    def _encode_delta(self, delta: np.ndarray) -> Tuple[bytes, str, float]:
+        """Pick the smallest encoding for a fine-tune residual:
+        raw dense, sparse (exact for eps=0 / integers), or quantized
+        (floats only, finite only). Raw wins ties, so compression never
+        costs bytes and never loses exactness without winning space.
+        Returns ``(mvec_bytes, encoding, declared_bound)``."""
+        n, item = delta.size, delta.itemsize
+        dense_cost = n * item
+        kind = delta.dtype.kind
+        eps = self.sparse_eps if kind == "f" else 0.0
+        if eps and kind == "f":
+            nnz = int(np.count_nonzero(np.abs(delta) > eps))
+        else:
+            nnz = int(np.count_nonzero(delta))
+        best = ("dense", dense_cost)
+        sparse_cost = 16 + nnz * (8 + item)
+        if sparse_cost < best[1]:
+            best = ("sparse", sparse_cost)
+        can_quant = (kind == "f" and n > 0
+                     and bool(np.isfinite(delta).all()))
+        if can_quant:
+            code_item = 1 if self.quant_dtype == "int8" else 2
+            quant_cost = 28 + n * code_item
+            if quant_cost < best[1]:
+                best = ("quant", quant_cost)
+        if best[0] == "sparse":
+            buf = mvec.encode_sparse(delta, flags=mvec.FLAG_DELTA, eps=eps)
+            return buf, "sparse", float(eps)
+        if best[0] == "quant":
+            buf = mvec.encode_quant(delta, self.quant_dtype,
+                                    flags=mvec.FLAG_DELTA)
+            return buf, "quant", mvec.decode_aux(buf).bound
+        return mvec.encode(delta, flags=mvec.FLAG_DELTA), "dense", 0.0
+
+    def _decref_model_pages(self, model_id: str) -> None:
+        """Drop page references held by a model's current layer files
+        (before a re-save overwrites them, or a delete removes them)."""
+        for li in self.catalog.get_layers(model_id):
+            if li.file.startswith("@"):
+                continue
+            path = self._dir(model_id) / li.file
+            if not path.exists():
+                continue
+            try:
+                with open(path, "rb") as f:
+                    head, aux = mvec.read_aux(f)
+            except (ValueError, struct.error):
+                continue
+            if head.is_paged:
+                self.pages.decref(aux.digests)
 
     def save(self, model_id: str, arch_meta: dict, params,
              base_model: Optional[str] = None,
@@ -206,6 +417,15 @@ class DecoupledStore:
             for k in [k for k in self._layer_cache
                       if k[0].startswith(prefixes)]:
                 self.stats.cache_bytes -= self._layer_cache.pop(k).nbytes
+        # re-save under the same id: release page references held by the
+        # files about to be overwritten, and clear the old layer files so
+        # a save with fewer layers leaves no unreachable garbage behind
+        old_layers = self.catalog.get_layers(model_id)
+        if old_layers:
+            self._decref_model_pages(model_id)
+            for li in old_layers:
+                if not li.file.startswith("@"):
+                    (d / li.file).unlink(missing_ok=True)
         (d / "architecture.json").write_text(json.dumps(arch_meta, indent=1))
         flat = flatten_params(params)
         base_flat: Dict[str, Any] = {}
@@ -237,24 +457,44 @@ class DecoupledStore:
                         and arr.dtype.kind in "fiu"):
                     # changed, same geometry: store only the per-layer
                     # delta; reads compose base + delta (integers exact
-                    # via wraparound, floats within 1 ulp)
+                    # via wraparound, floats within 1 ulp — or within
+                    # the declared bound when compression quantizes)
                     with np.errstate(over="ignore"):
                         delta = arr - base_arr
+                    if self.compress_deltas:
+                        buf, enc, bound = self._encode_delta(delta)
+                    else:
+                        buf = mvec.encode(delta, flags=mvec.FLAG_DELTA)
+                        enc, bound = "dense", 0.0
                     fname = f"layer_{i:05d}.delta.mvec"
-                    (d / fname).write_bytes(
-                        mvec.encode(delta, flags=mvec.FLAG_DELTA))
+                    (d / fname).write_bytes(buf)
+                    if enc != "dense":
+                        self.stats.compressed_delta_bytes += len(buf)
+                        self.stats.quant_error_bound = max(
+                            self.stats.quant_error_bound, bound)
                     layers.append(LayerInfo(
                         model_id=model_id, layer_name=key, layer_index=i,
                         dtype=str(arr.dtype), shape=list(arr.shape),
                         nbytes=arr.nbytes, file=fname,
-                        delta_of=base_model))
+                        delta_of=base_model, enc=enc, bound=bound))
                     continue
             fname = f"layer_{i:05d}.mvec"
-            (d / fname).write_bytes(mvec.encode(arr))
+            enc = "dense"
+            if self.dedup_pages:
+                payload, pname = mvec.payload_array(arr)
+                digests, dup_pages, dup_bytes = self.pages.put(
+                    payload.tobytes())
+                (d / fname).write_bytes(mvec.encode_paged(
+                    pname, payload.shape, self.pages.page_bytes, digests))
+                self.stats.dedup_pages += dup_pages
+                self.stats.dedup_bytes_saved += dup_bytes
+                enc = "paged"
+            else:
+                (d / fname).write_bytes(mvec.encode(arr))
             layers.append(LayerInfo(
                 model_id=model_id, layer_name=key, layer_index=i,
                 dtype=str(arr.dtype), shape=list(arr.shape),
-                nbytes=arr.nbytes, file=fname, delta_of=None))
+                nbytes=arr.nbytes, file=fname, delta_of=None, enc=enc))
         self.catalog.register_layers(model_id, layers)
         # save generation: rewriting a model's files under the same id
         # must change every identity derived from them (trunk
@@ -484,23 +724,64 @@ class DecoupledStore:
         if cached is not None:
             return cached
         with open(path, "rb") as f:
-            if rows is not None:
-                if mvec.read_header(f).is_delta:
-                    raise ValueError(
-                        f"{path} holds a FLAG_DELTA payload but is "
-                        "catalogued as plain weights")
-                arr = mvec.read_slice(f, rows[0], rows[1])
-                self.stats.loaded_bytes += arr.nbytes
+            head = mvec.read_header(f)
+            if head.is_delta:
+                raise ValueError(
+                    f"{path} holds a FLAG_DELTA payload but is "
+                    "catalogued as plain weights")
+            if head.is_paged:
+                arr, nread = self._read_paged(path, rows)
+                self.stats.loaded_bytes += nread
+            elif rows is not None:
+                arr, nread, _aux = mvec.read_slice_counted(
+                    f, rows[0], rows[1])
+                self.stats.loaded_bytes += nread
             else:
                 buf = f.read()
-                if mvec.decode_header(buf).is_delta:
-                    raise ValueError(
-                        f"{path} holds a FLAG_DELTA payload but is "
-                        "catalogued as plain weights")
                 arr = mvec.decode(buf)
                 self.stats.loaded_bytes += len(buf)
         self._cache_put(key, arr)
         return arr
+
+    def _read_paged(self, path: Path,
+                    rows: Optional[Tuple[int, int]] = None
+                    ) -> Tuple[np.ndarray, int]:
+        """Materialize a paged layer (or a row range of it) from the
+        page store, reading only the table plus the pages that overlap
+        the requested byte range — paging preserves the partial-load
+        property at page granularity."""
+        buf = path.read_bytes()
+        h = mvec.decode_header(buf)
+        aux = mvec.decode_aux(buf)
+        nread = len(buf)
+        row_bytes = h.itemsize
+        for dim in h.shape[1:]:
+            row_bytes *= dim
+        if rows is None:
+            lo, hi = 0, h.nbytes
+            out_shape = h.shape
+        else:
+            start = min(max(0, rows[0]), h.shape[0])
+            stop = min(max(rows[1], start), h.shape[0])
+            lo, hi = start * row_bytes, stop * row_bytes
+            out_shape = (stop - start,) + h.shape[1:]
+        pb = aux.page_bytes
+        p0 = lo // pb if pb else 0
+        p1 = -(-hi // pb) if pb else 0
+        data = b"".join(self.pages.read_page(dg)
+                        for dg in aux.digests[p0:p1])
+        nread += len(data)
+        raw = data[lo - p0 * pb:hi - p0 * pb]
+        arr = np.frombuffer(raw, dtype=np.dtype(
+            {"bfloat16": np.uint16}.get(h.dtype, h.dtype))
+        ).reshape(out_shape)
+        if h.dtype == "bfloat16":
+            try:
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            except ImportError:  # pragma: no cover
+                pass
+        return arr, nread
 
     def _read_delta_layer(self, model_id: str, li: LayerInfo,
                           rows: Optional[Tuple[int, int]] = None):
@@ -532,15 +813,19 @@ class DecoupledStore:
                     f"{path} is catalogued as a delta of {li.delta_of!r} "
                     "but its Mvec header lacks FLAG_DELTA")
             if rows is not None:
-                delta = mvec.read_slice(f, rows[0], rows[1])
-                nread = delta.nbytes
+                delta, nread, aux = mvec.read_slice_counted(
+                    f, rows[0], rows[1])
             else:
                 buf = f.read()
                 delta = mvec.decode(buf)
                 nread = len(buf)
+                aux = mvec.decode_aux(buf)
         self.stats.loaded_bytes += nread
         self.stats.delta_bytes += nread
         self.stats.delta_composes += 1
+        if aux.bound:
+            self.stats.quant_error_bound = max(
+                self.stats.quant_error_bound, aux.bound)
         with np.errstate(over="ignore"):
             arr = base_arr + delta
         self._cache_put(key, arr)
@@ -598,12 +883,29 @@ class DecoupledStore:
         ).hexdigest()[:16]
         return f"trunk:{digest}"
 
+    def _file_stored_bytes(self, path: Path) -> int:
+        """Disk bytes a layer file accounts for: its own size, plus its
+        referenced pages for a paged table (a page shared with another
+        model is attributed to both — per-model sums overstate shared
+        storage; :meth:`disk_footprint` is the deduplicated truth)."""
+        size = path.stat().st_size
+        try:
+            with open(path, "rb") as f:
+                head, aux = mvec.read_aux(f)
+        except (ValueError, struct.error):
+            return size
+        if head.is_paged:
+            size += sum(self.pages.page_size_on_disk(dg)
+                        for dg in aux.digests)
+        return size
+
     def stored_bytes(self, model_id: str) -> int:
         """Actual new bytes on disk (referenced base layers count 0)."""
         total = 0
         for li in self.catalog.get_layers(model_id):
             if not li.file.startswith("@"):
-                total += (self._dir(model_id) / li.file).stat().st_size
+                total += self._file_stored_bytes(
+                    self._dir(model_id) / li.file)
         return total
 
     def delta_bytes(self, model_id: str) -> int:
@@ -616,6 +918,90 @@ class DecoupledStore:
             if self._is_composed_delta(li):
                 total += (self._dir(model_id) / li.file).stat().st_size
         return total
+
+    def cold_resolve_bytes(self, model_id: str) -> int:
+        """Disk bytes a cold full load of the model reads: every unique
+        concrete file its layers resolve through (delta chains include
+        the base files the composition re-reads), with paged tables
+        counting table + referenced pages. This is the compressed
+        ``ModelSize`` the Eq. 7 host mem-read term should charge."""
+        paths = sorted({p for li in self.catalog.get_layers(model_id)
+                        for p in self._layer_paths(model_id, li)})
+        return sum(self._file_stored_bytes(Path(p)) for p in paths)
+
+    def disk_footprint(self) -> int:
+        """Total bytes the store holds on disk — every model's layer
+        files and architecture metadata plus the (deduplicated) page
+        store. Shared pages count once, which is the whole point."""
+        total = 0
+        for info in self.catalog.list_models():
+            d = self._dir(info.model_id)
+            if not d.is_dir():
+                continue
+            total += sum(p.stat().st_size for p in d.iterdir()
+                         if p.is_file())
+        if (self.root / "_pages").is_dir():
+            total += self.pages.total_bytes()
+        return total
+
+    def dependents(self, model_id: str) -> List[str]:
+        """Models whose stored layers depend on this one: fine-tune
+        lineage (``base_model``/``delta_of``) or direct ``@model:layer``
+        / ``@model/file`` references."""
+        out = set()
+        for info in self.catalog.list_models():
+            if info.model_id == model_id:
+                continue
+            if info.base_model == model_id:
+                out.add(info.model_id)
+                continue
+            for li in self.catalog.get_layers(info.model_id):
+                if (li.delta_of == model_id
+                        or li.file.startswith(f"@{model_id}:")
+                        or li.file.startswith(f"@{model_id}/")):
+                    out.add(info.model_id)
+                    break
+        return sorted(out)
+
+    def delete(self, model_id: str) -> None:
+        """Drop a model: refuse while dependents still read through it
+        (so a page or base layer reachable via ``'@model:layer'``
+        references can never lose its owner), release its page
+        references, evict its cached tensors, remove its files and
+        catalog rows. Orphaned pages stay on disk until :meth:`vacuum`.
+        """
+        self.catalog.get_model(model_id)          # KeyError if unknown
+        deps = self.dependents(model_id)
+        if deps:
+            raise ValueError(
+                f"cannot delete {model_id!r}: referenced by {deps}")
+        self._decref_model_pages(model_id)
+        d = self._dir(model_id)
+        prefix = str(d) + os.sep
+        with self._cache_lock:
+            for k in [k for k in self._layer_cache
+                      if k[0].startswith(prefix)]:
+                self.stats.cache_bytes -= self._layer_cache.pop(k).nbytes
+            self._pin_count.pop(model_id, None)
+            for p in self._pin_paths.pop(model_id, []):
+                left = self._pinned_paths.get(p, 0) - 1
+                if left > 0:
+                    self._pinned_paths[p] = left
+                else:
+                    self._pinned_paths.pop(p, None)
+        if d.is_dir():
+            shutil.rmtree(d)
+        self.catalog.drop_model(model_id)
+
+    def vacuum(self) -> Tuple[int, int]:
+        """GC orphaned tensor pages (refcount 0). Returns
+        ``(pages_removed, bytes_freed)``; referenced pages — including
+        ones reachable only through ``'@model:layer'`` chains, whose
+        references :meth:`delete` refuses to orphan — are never
+        collected."""
+        if not (self.root / "_pages").is_dir():
+            return 0, 0
+        return self.pages.vacuum()
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ import pytest
 from repro.core import make_task, pretrain_model
 from repro.core.task import TaskSpec
 from repro.engine import MorphingServer, MorphingSession
+from repro.engine.config import EngineConfig
 from repro.pipeline import ContinuousBatcher, OpProfile, Request
 from repro.storage import Catalog, DecoupledStore
 
@@ -887,6 +888,57 @@ def test_delta_fleet_shares_one_embed_lane(tmp_path, serve_zoo, table,
         sess.models[t].loaded_bytes for t in heads)
     # after the base's first request every fine-tune row is a share hit
     assert st.share_hits >= 3 * len(X)
+
+
+def test_compressed_fleet_serving_parity_and_bytes(tmp_path, serve_zoo,
+                                                   table, sample):
+    """K=8 head-delta fleet served through MorphingServer with delta
+    compression ON vs OFF: row-level score parity within the declared
+    quantization bound, strictly fewer delta bytes read from disk, and
+    the compression gauges surfaced on ServerStats/QueryReport."""
+    K = 8
+
+    def run_fleet(root, compress):
+        sess = make_session(root, serve_zoo, table,
+                            config=EngineConfig(compress_deltas=compress))
+        sess.resolve_task("sent", sample.X, sample.y)
+        heads = _register_fleet(sess, sample, K)
+        scores = {}
+        with MorphingServer(session=sess, max_wait_s=0.001) as server:
+            for task in sorted(heads):
+                out = server.predict(f"PREDICT emb USING TASK {task} "
+                                     "FROM reviews WHERE len > 50",
+                                     timeout=10.0)
+                scores[task] = np.asarray(out.scores)
+            st = server.stats()
+        return sess, heads, scores, st
+
+    sess_c, heads, got, st_c = run_fleet(tmp_path / "on", True)
+    sess_u, _, ref, st_u = run_fleet(tmp_path / "off", False)
+    assert sorted(got) == sorted(ref) and len(got) == K
+    # parity: per-weight quant error <= declared bound, so a score row
+    # F_i . w is off by at most bound * ||F_i||_1
+    bound = st_c.quant_error_bound
+    assert bound > 0.0
+    X = table["emb"][table["len"] > 50]
+    F = serve_zoo[0].features(X)
+    atol = bound * float(np.abs(F).sum(axis=1).max()) + 1e-6
+    for task in got:
+        np.testing.assert_allclose(got[task], ref[task], atol=atol)
+        # exact weights differ: parity must come from the bound, not
+        # from compression silently being a no-op
+    assert sess_c.dstore.stats.compressed_delta_bytes > 0
+    # compressed fleet reads strictly fewer delta bytes off disk
+    assert 0 < st_c.delta_loaded_bytes < st_u.delta_loaded_bytes
+    assert sum(sess_c.dstore.delta_bytes(f"m0-ft{i}") for i in range(K)) \
+        < sum(sess_u.dstore.delta_bytes(f"m0-ft{i}") for i in range(K))
+    # gauges ride ServerStats and QueryReport; OFF run declares no bound
+    assert st_u.quant_error_bound == 0.0 == st_u.compressed_delta_bytes
+    rep = sess_c.sql("PREDICT emb USING TASK sent_ft0 FROM reviews "
+                     "WHERE len > 50").report
+    assert rep.quant_error_bound == bound
+    assert rep.compressed_delta_bytes == \
+        sess_c.dstore.stats.compressed_delta_bytes
 
 
 def test_trunk_delta_variant_gets_own_lane(tmp_path, serve_zoo, table,

@@ -141,6 +141,49 @@ def test_delta_loaded_bytes_count_only_delta_for_warm_base(tmp_path,
     assert 0 < read < ds.stored_bytes("base")
 
 
+def test_no_double_count_on_cached_composed_delta_reads(tmp_path, params):
+    """Byte-accounting audit (regression): a cache-hit read of a
+    *composed* delta tensor must not re-count ``loaded_bytes`` or
+    ``delta_bytes`` — disk counters move only when disk is read, and
+    ``delta_bytes`` stays an exact subset of ``loaded_bytes``:
+
+      loaded_bytes == (plain file bytes read) + (delta file bytes read)
+
+    A composed tensor served from cache lands entirely in
+    ``cache_hit_bytes`` (at the composed tensor's logical size, which is
+    NOT a disk read and must never be attributed as one)."""
+    ds = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    ds.save("base", {"arch": "mlp"}, params)
+    ft = dict(params, embed=params["embed"] * 1.01)
+    ds.save("ft", {"arch": "mlp"}, ft, base_model="base")
+    # fresh store: no save-time reads polluting the ledger
+    cold = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    cold.load("ft")
+    disk_files = cold.cold_resolve_bytes("ft")  # base + delta files
+    s = cold.stats
+    assert s.loaded_bytes == disk_files
+    assert s.delta_bytes == cold.delta_bytes("ft")
+    assert s.delta_bytes < s.loaded_bytes
+    snap = (s.loaded_bytes, s.delta_bytes, s.delta_composes)
+    hit_b0 = s.cache_hit_bytes
+    _, flat = cold.load("ft")                   # fully warm repeat
+    assert (s.loaded_bytes, s.delta_bytes, s.delta_composes) == snap
+    # the repeat is served at the composed tensors' logical size
+    assert s.cache_hit_bytes - hit_b0 == sum(
+        np.asarray(v).nbytes for v in flat.values())
+    # warm-base, cold-variant: a second fine-tune pays exactly its own
+    # delta file (base already cached) — no re-count of base bytes
+    ft2 = dict(params, embed=params["embed"] * 1.02)
+    cold.save("ft2", {"arch": "mlp"}, ft2, base_model="base")
+    l0, d0 = s.loaded_bytes, s.delta_bytes
+    cold2 = DecoupledStore(tmp_path / "dec", Catalog(tmp_path / "cat"))
+    cold2.load("base")
+    l0, d0 = cold2.stats.loaded_bytes, cold2.stats.delta_bytes
+    cold2.load("ft2")
+    assert cold2.stats.loaded_bytes - l0 \
+        == cold2.stats.delta_bytes - d0 == cold2.delta_bytes("ft2")
+
+
 def test_resave_base_invalidates_composed_cache(tmp_path, params):
     """Re-saving a base must evict dependents' composed tensors — a
     stale composition would serve old base + new nothing."""

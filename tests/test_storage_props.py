@@ -1,0 +1,532 @@
+"""Property-based round-trip suite for the storage compression layer
+(docs/architecture.md "Compressed deltas & tensor-page dedup").
+
+Lossy-but-bounded compression sits on the model-resolve path, where a
+silent corruption would change every inference downstream — so the
+invariants here are stated as properties over random dtypes, shapes and
+sparsity levels rather than hand-picked examples:
+
+- save -> load is **bit-exact** for uncompressed payloads and for
+  integer deltas (wraparound composition), with compression enabled;
+- compressed float deltas reconstruct within the **declared** bound
+  (sparse: the sparsify epsilon; quantized: scale/2), never an
+  undeclared one;
+- composed base+delta+delta chains match an eagerly materialized
+  oracle within the sum of the declared per-hop bounds;
+- row-range reads agree exactly with slicing the full decode, for
+  every encoding (dense, sparse, quant, paged);
+- page dedup refcounts survive interleaved save/delete/register_finetune
+  and ``vacuum()`` never collects a referenced page.
+
+Runs through ``tests/_hypothesis_compat`` (conftest installs it), so the
+suite is deterministic with or without the real ``hypothesis`` package.
+"""
+import io
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.storage import Catalog, DecoupledStore, mvec
+
+INT_DTYPES = ["int8", "int16", "int32", "int64", "uint8", "uint32"]
+FLOAT_DTYPES = ["float16", "float32", "float64"]
+
+
+def _rand(rng: np.random.Generator, shape, dtype: str) -> np.ndarray:
+    if dtype in FLOAT_DTYPES:
+        return rng.standard_normal(shape).astype(dtype)
+    info = np.iinfo(dtype)
+    return rng.integers(info.min, info.max, size=shape,
+                        endpoint=True).astype(dtype)
+
+
+def _sparsify(rng: np.random.Generator, arr: np.ndarray,
+              frac: float) -> np.ndarray:
+    out = arr.copy()
+    out[rng.random(arr.shape) >= frac] = 0
+    return out
+
+
+def _store(root: str, **kw) -> DecoupledStore:
+    root = Path(root)
+    return DecoupledStore(root / "layers", Catalog(root / "catalog"), **kw)
+
+
+def _compose_slack(arr: np.ndarray) -> float:
+    """Float rounding slack on top of a declared quant bound: the
+    dequantized delta is cast to the logical dtype and composed with the
+    base in that dtype, each adding <= 1 ulp of the value's magnitude."""
+    if arr.dtype.kind != "f":
+        return 0.0
+    return 4 * float(np.finfo(arr.dtype).eps) * float(np.max(np.abs(arr)))
+
+
+# ---------------------------------------------------------------------------
+# Mvec payload encodings
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.sampled_from(INT_DTYPES + FLOAT_DTYPES),
+       st.integers(1, 37), st.integers(1, 9))
+def test_dense_roundtrip_bit_exact(seed, dtype, rows, cols):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (rows, cols), dtype)
+    buf = mvec.encode(a)
+    out = mvec.decode(buf)
+    assert out.dtype == a.dtype and out.shape == a.shape
+    assert out.tobytes() == a.tobytes()
+
+
+@given(st.integers(0, 10_000), st.sampled_from(FLOAT_DTYPES),
+       st.floats(0.0, 0.9), st.integers(2, 41))
+def test_sparse_roundtrip_exact_floats(seed, dtype, frac, rows):
+    rng = np.random.default_rng(seed)
+    a = _sparsify(rng, _rand(rng, (rows, 7), dtype), frac)
+    buf = mvec.encode_sparse(a, flags=mvec.FLAG_DELTA)
+    h = mvec.decode_header(buf)
+    assert h.is_sparse and h.is_delta
+    out = mvec.decode(buf)
+    # eps=0 drops only zeros: value-exact reconstruction
+    assert np.array_equal(out, a)
+    assert mvec.decode_aux(buf).bound == 0.0
+
+
+@given(st.integers(0, 10_000), st.sampled_from(INT_DTYPES),
+       st.floats(0.0, 0.5), st.integers(1, 33))
+def test_sparse_roundtrip_bit_exact_ints(seed, dtype, frac, rows):
+    rng = np.random.default_rng(seed)
+    a = _sparsify(rng, _rand(rng, (rows, 5), dtype), frac)
+    out = mvec.decode(mvec.encode_sparse(a))
+    assert out.dtype == a.dtype
+    assert out.tobytes() == a.tobytes()
+
+
+@given(st.integers(0, 10_000), st.integers(3, 29), st.integers(0, 28),
+       st.integers(0, 30))
+def test_sparse_slice_matches_dense_slice(seed, rows, start, span):
+    rng = np.random.default_rng(seed)
+    a = _sparsify(rng, _rand(rng, (rows, 6), "float32"), 0.3)
+    buf = mvec.encode_sparse(a)
+    stop = start + span
+    expect = a[min(start, rows):min(max(stop, start), rows)]
+    got = mvec.decode_slice(buf, start, stop)
+    assert np.array_equal(got, expect)
+    arr, nread, aux = mvec.read_slice_counted(io.BytesIO(buf), start, stop)
+    assert np.array_equal(arr, expect)
+    assert 0 <= nread <= len(buf)
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["int8", "int16"]),
+       st.sampled_from(FLOAT_DTYPES), st.integers(1, 31))
+def test_quant_roundtrip_within_declared_bound(seed, code, dtype, rows):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (rows, 5), dtype)
+    buf = mvec.encode_quant(a, code)
+    aux = mvec.decode_aux(buf)
+    assert aux.encoding == "quant" and aux.code_dtype == code
+    out = mvec.decode(buf)
+    assert out.dtype == a.dtype
+    err = np.max(np.abs(out.astype(np.float64) - a.astype(np.float64)))
+    # float16 casts of the dequantized value add at most 1 ulp on top
+    # of the declared bound; float32/64 stay strictly within it
+    slack = np.finfo(dtype).eps * float(np.max(np.abs(a))) if rows else 0.0
+    assert err <= aux.bound + slack + 1e-12
+
+
+@given(st.integers(0, 10_000), st.integers(3, 23), st.integers(0, 25),
+       st.integers(0, 25))
+def test_quant_slice_consistent_with_full_decode(seed, rows, start, span):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (rows, 4), "float32")
+    buf = mvec.encode_quant(a, "int8")
+    full = mvec.decode(buf)
+    stop = start + span
+    lo, hi = min(start, rows), min(max(stop, start), rows)
+    assert np.array_equal(mvec.decode_slice(buf, start, stop), full[lo:hi])
+    arr, nread, aux = mvec.read_slice_counted(io.BytesIO(buf), start, stop)
+    assert np.array_equal(arr, full[lo:hi])
+    assert nread <= len(buf)
+
+
+@given(st.integers(0, 10_000))
+def test_quant_zero_entries_stay_zero(seed):
+    rng = np.random.default_rng(seed)
+    a = _sparsify(rng, _rand(rng, (17, 3), "float32"), 0.4)
+    out = mvec.decode(mvec.encode_quant(a, "int8"))
+    # symmetric quant (zero_point=0): exact zeros survive exactly, so a
+    # delta that leaves an entry untouched still leaves it untouched
+    assert np.all(out[a == 0.0] == 0.0)
+
+
+@given(st.integers(0, 10_000))
+def test_quant_int16_bound_tighter_than_int8(seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (11, 7), "float32")
+    b8 = mvec.decode_aux(mvec.encode_quant(a, "int8")).bound
+    b16 = mvec.decode_aux(mvec.encode_quant(a, "int16")).bound
+    assert b16 < b8
+    assert b8 == pytest.approx(float(np.max(np.abs(a))) / 127 / 2)
+
+
+def test_encoding_flag_hygiene():
+    a = np.ones((3, 3), np.float32)
+    with pytest.raises(ValueError):
+        mvec.encode(a, flags=mvec.FLAG_SPARSE)
+    with pytest.raises(ValueError):
+        mvec.encode_sparse(a, flags=mvec.FLAG_QUANT)
+    with pytest.raises(ValueError):
+        mvec.encode_quant(a, "int32")
+    with pytest.raises(ValueError):
+        mvec.encode_quant(a.astype(np.int32))
+    tbl = mvec.encode_paged("float32", (3, 3), 64, [b"\0" * 32])
+    with pytest.raises(ValueError):
+        mvec.decode(tbl)          # paged payloads need the page store
+    with pytest.raises(ValueError):
+        mvec.encode_paged("float32", (3, 3), 64, [b"short"])
+
+
+def test_aux_info_survives_file_roundtrip():
+    a = np.linspace(-1, 1, 24, dtype=np.float32).reshape(6, 4)
+    for buf in (mvec.encode_sparse(a), mvec.encode_quant(a, "int16")):
+        h, aux = mvec.read_aux(io.BytesIO(buf))
+        assert (h.dtype, h.shape) == ("float32", (6, 4))
+        assert aux == mvec.decode_aux(buf)
+    tbl = mvec.encode_paged("float32", (6, 4), 16, [b"\1" * 32, b"\2" * 32])
+    h, aux = mvec.read_aux(io.BytesIO(tbl))
+    assert aux.page_bytes == 16 and len(aux.digests) == 2
+
+
+# ---------------------------------------------------------------------------
+# DecoupledStore round-trips with compression enabled
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.sampled_from(INT_DTYPES + FLOAT_DTYPES))
+def test_store_uncompressed_roundtrip_bit_exact(seed, dtype):
+    rng = np.random.default_rng(seed)
+    params = {"trunk/W": _rand(rng, (19, 6), dtype),
+              "head/w": _rand(rng, (6,), dtype)}
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td)
+        ds.save("m", {"arch": "t"}, params)
+        _, flat = ds.load("m")
+        for k, v in params.items():
+            assert flat[k].tobytes() == v.tobytes()
+
+
+@given(st.integers(0, 10_000), st.sampled_from(INT_DTYPES),
+       st.floats(0.0, 0.6))
+def test_store_integer_delta_bit_exact_compressed(seed, dtype, frac):
+    """Integer deltas stay bit-exact through sparse encoding + the
+    wraparound compose path, with compression enabled."""
+    rng = np.random.default_rng(seed)
+    base = {"trunk/W": _rand(rng, (13, 5), dtype)}
+    ft = {"trunk/W": base["trunk/W"].copy()}
+    mask = rng.random(ft["trunk/W"].shape) < frac
+    with np.errstate(over="ignore"):
+        ft["trunk/W"][mask] += _rand(rng, (13, 5), dtype)[mask]
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, compress_deltas=True)
+        ds.save("base", {"arch": "t"}, base)
+        ds.save("ft", {"arch": "t"}, ft, base_model="base")
+        for li in ds.catalog.get_layers("ft"):
+            assert li.bound == 0.0       # integer encodings are exact
+        _, flat = ds.load("ft")
+        assert flat["trunk/W"].tobytes() == ft["trunk/W"].tobytes()
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["int8", "int16"]),
+       st.floats(0.05, 1.0))
+def test_store_float_delta_within_declared_bound(seed, quant, frac):
+    rng = np.random.default_rng(seed)
+    trunk = rng.standard_normal((21, 8)).astype(np.float32)
+    ft_trunk = trunk.copy()
+    mask = rng.random(trunk.shape) < frac
+    ft_trunk[mask] += rng.standard_normal(int(mask.sum())).astype(
+        np.float32) * 0.1
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, compress_deltas=True, quant_dtype=quant)
+        ds.save("base", {"arch": "t"}, {"trunk/W": trunk})
+        ds.save("ft", {"arch": "t"}, {"trunk/W": ft_trunk},
+                base_model="base")
+        li = ds.catalog.get_layers("ft")[0]
+        _, flat = ds.load("ft")
+        err = np.max(np.abs(flat["trunk/W"].astype(np.float64)
+                            - ft_trunk.astype(np.float64)))
+        assert err <= li.bound + _compose_slack(ft_trunk) + 1e-12
+        if li.enc in ("sparse", "quant"):
+            # the compressed file must actually be smaller than raw
+            assert ds.delta_bytes("ft") < ft_trunk.nbytes
+            assert ds.stats.compressed_delta_bytes > 0
+
+
+@given(st.integers(0, 10_000))
+def test_store_sparse_float_delta_exact(seed):
+    """A genuinely sparse float delta picks the sparse encoding and
+    round-trips exactly (bound 0)."""
+    rng = np.random.default_rng(seed)
+    trunk = rng.standard_normal((32, 16)).astype(np.float32)
+    ft_trunk = trunk.copy()
+    idx = rng.integers(0, trunk.size, size=10)
+    ft_trunk.reshape(-1)[idx] += 1.5
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, compress_deltas=True)
+        ds.save("base", {"arch": "t"}, {"trunk/W": trunk})
+        ds.save("ft", {"arch": "t"}, {"trunk/W": ft_trunk},
+                base_model="base")
+        li = ds.catalog.get_layers("ft")[0]
+        assert li.enc == "sparse" and li.bound == 0.0
+        _, flat = ds.load("ft")
+        assert np.array_equal(flat["trunk/W"], ft_trunk)
+
+
+@given(st.integers(0, 10_000), st.integers(0, 30), st.integers(1, 30))
+def test_store_row_slice_matches_full_load(seed, start, span):
+    rng = np.random.default_rng(seed)
+    trunk = rng.standard_normal((30, 6)).astype(np.float32)
+    dense_ft = trunk + rng.standard_normal(trunk.shape).astype(
+        np.float32) * 0.05
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, compress_deltas=True)
+        ds.save("base", {"arch": "t"}, {"trunk/W": trunk})
+        ds.save("ft", {"arch": "t"}, {"trunk/W": dense_ft},
+                base_model="base")
+        _, flat = ds.load("ft")
+        full = flat["trunk/W"]
+        stop = min(start + span, 30)
+        start = min(start, 30)
+        got = ds.load_layer_rows("ft", "trunk/W", start, stop)
+        assert np.array_equal(got, full[start:stop])
+
+
+@given(st.integers(0, 10_000), st.booleans())
+def test_chain_compose_matches_eager_oracle(seed, second_hop_sparse):
+    """base + delta + delta chains equal an eagerly materialized oracle
+    within the sum of the declared per-hop bounds."""
+    rng = np.random.default_rng(seed)
+    trunk = rng.standard_normal((24, 8)).astype(np.float32)
+    v1 = trunk + rng.standard_normal(trunk.shape).astype(np.float32) * 0.05
+    v2 = v1.copy()
+    if second_hop_sparse:
+        v2.reshape(-1)[rng.integers(0, v2.size, 6)] += 0.7
+    else:
+        v2 += rng.standard_normal(v2.shape).astype(np.float32) * 0.02
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, compress_deltas=True)
+        ds.save("m0", {"arch": "t"}, {"trunk/W": trunk})
+        ds.save("m1", {"arch": "t"}, {"trunk/W": v1}, base_model="m0")
+        # the oracle composes through what the store *actually* holds at
+        # each hop: save v2 against the reconstructed v1, like
+        # register_finetune does (load base, overlay, save)
+        _, f1 = ds.load("m1")
+        recon1 = np.asarray(f1["trunk/W"])
+        delta2_target = recon1 + (v2 - v1)
+        ds.save("m2", {"arch": "t"}, {"trunk/W": delta2_target},
+                base_model="m1")
+        bound = sum(li.bound for m in ("m1", "m2")
+                    for li in ds.catalog.get_layers(m))
+        # cold cache: force disk composition through the whole chain
+        ds2 = DecoupledStore(Path(td) / "layers",
+                             Catalog(Path(td) / "catalog"))
+        _, f2 = ds2.load("m2")
+        err = np.max(np.abs(np.asarray(f2["trunk/W"], dtype=np.float64)
+                            - delta2_target.astype(np.float64)))
+        assert err <= bound + 1e-6
+        assert ds2.stats.delta_composes >= 2
+
+
+@given(st.integers(0, 10_000), st.sampled_from(INT_DTYPES + FLOAT_DTYPES),
+       st.sampled_from([64, 256, 1 << 16]))
+def test_paged_roundtrip_bit_exact(seed, dtype, page_bytes):
+    rng = np.random.default_rng(seed)
+    params = {"trunk/W": _rand(rng, (17, 9), dtype)}
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, dedup_pages=True, page_bytes=page_bytes)
+        ds.save("m", {"arch": "t"}, params)
+        _, flat = ds.load("m")
+        assert flat["trunk/W"].tobytes() == params["trunk/W"].tobytes()
+
+
+@given(st.integers(0, 10_000), st.integers(0, 25), st.integers(1, 25))
+def test_paged_row_slice_matches(seed, start, span):
+    rng = np.random.default_rng(seed)
+    trunk = rng.standard_normal((25, 11)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, dedup_pages=True, page_bytes=128)
+        ds.save("m", {"arch": "t"}, {"trunk/W": trunk})
+        stop = min(start + span, 25)
+        start = min(start, 25)
+        got = ds.load_layer_rows("m", "trunk/W", start, stop)
+        assert np.array_equal(got, trunk[start:stop])
+
+
+@given(st.integers(0, 10_000))
+def test_paged_partial_read_touches_fewer_bytes(seed):
+    rng = np.random.default_rng(seed)
+    trunk = rng.standard_normal((256, 16)).astype(np.float32)  # 16 KiB
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, dedup_pages=True, page_bytes=1024)
+        ds.save("m", {"arch": "t"}, {"trunk/W": trunk})
+        before = ds.stats.loaded_bytes
+        ds.load_layer_rows("m", "trunk/W", 0, 8)   # first page only
+        narrow = ds.stats.loaded_bytes - before
+        assert narrow < trunk.nbytes / 4
+
+
+@given(st.integers(0, 10_000))
+def test_paged_and_compressed_fleet_matches_oracle(seed):
+    """Both layers on at once: paged base + compressed deltas still
+    reconstruct each fleet member within its declared bound."""
+    rng = np.random.default_rng(seed)
+    trunk = rng.standard_normal((40, 12)).astype(np.float32)
+    fleet = {}
+    for k in range(4):
+        v = trunk + rng.standard_normal(trunk.shape).astype(
+            np.float32) * 0.03
+        fleet[f"ft{k}"] = v
+    with tempfile.TemporaryDirectory() as td:
+        ds = _store(td, compress_deltas=True, dedup_pages=True,
+                    page_bytes=2048)
+        ds.save("base", {"arch": "t"}, {"trunk/W": trunk})
+        for mid, v in fleet.items():
+            ds.save(mid, {"arch": "t"}, {"trunk/W": v}, base_model="base")
+        for mid, v in fleet.items():
+            li = ds.catalog.get_layers(mid)[0]
+            _, flat = ds.load(mid)
+            err = np.max(np.abs(np.asarray(flat["trunk/W"], np.float64)
+                                - v.astype(np.float64)))
+            assert err <= li.bound + _compose_slack(v) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Dedup invariants: refcounts, vacuum safety, generations
+# ---------------------------------------------------------------------------
+
+def _page_refs(ds: DecoupledStore) -> dict:
+    with ds.pages._lock:
+        return dict(ds.pages._refs)
+
+
+def test_refcounts_interleaved_save_delete_finetune(tmp_path):
+    rng = np.random.default_rng(7)
+    trunk = rng.standard_normal((64, 32)).astype(np.float32)
+    ds = _store(tmp_path, compress_deltas=True, dedup_pages=True,
+                page_bytes=1024)
+    ds.save("base", {"arch": "t"}, {"trunk/W": trunk})
+    refs1 = _page_refs(ds)
+    assert all(v == 1 for v in refs1.values()) and refs1
+    # identical trunk under a second id: same pages, refcount 2
+    ds.save("twin", {"arch": "t"}, {"trunk/W": trunk})
+    refs2 = _page_refs(ds)
+    assert set(refs2) == set(refs1)
+    assert all(v == 2 for v in refs2.values())
+    # a fine-tune stores only a delta file -> no new page references
+    ft = trunk.copy()
+    ft[0] += 1.0
+    ds.save("ft", {"arch": "t"}, {"trunk/W": ft}, base_model="base")
+    assert _page_refs(ds) == refs2
+    # delete the twin: back to 1 everywhere, pages intact until vacuum
+    ds.delete("twin")
+    refs3 = _page_refs(ds)
+    assert all(v == 1 for v in refs3.values()) and set(refs3) == set(refs1)
+    assert ds.pages.total_bytes() >= trunk.nbytes
+    assert ds.vacuum() == (0, 0)     # every page still referenced
+    _, flat = ds.load("ft")
+    assert np.allclose(flat["trunk/W"], ft)
+
+
+def test_vacuum_never_collects_referenced_pages(tmp_path):
+    rng = np.random.default_rng(11)
+    trunk = rng.standard_normal((32, 32)).astype(np.float32)
+    ds = _store(tmp_path, compress_deltas=True, dedup_pages=True,
+                page_bytes=512)
+    ds.save("base", {"arch": "t"}, {"trunk/W": trunk,
+                                    "head/w": np.ones(32, np.float32)})
+    # ft's head is *unchanged*: stored as an '@base:head/w' reference —
+    # base's pages are then reachable only through that reference
+    ft = {"trunk/W": trunk + 0.25, "head/w": np.ones(32, np.float32)}
+    ds.save("ft", {"arch": "t"}, ft, base_model="base")
+    assert any(li.file.startswith("@base:")
+               for li in ds.catalog.get_layers("ft"))
+    # deleting the base would orphan the reference: must refuse
+    with pytest.raises(ValueError):
+        ds.delete("base")
+    assert ds.vacuum() == (0, 0)
+    # reads through the reference still work afterwards
+    assert np.allclose(ds.load("ft")[1]["head/w"], 1.0)
+    # tearing down in dependency order frees everything
+    ds.delete("ft")
+    ds.delete("base")
+    removed, freed = ds.vacuum()
+    assert removed > 0 and freed > 0
+    assert ds.pages.total_bytes() == 0
+
+
+def test_resave_same_id_bumps_generation_without_leaking_pages(tmp_path):
+    rng = np.random.default_rng(13)
+    ds = _store(tmp_path, dedup_pages=True, page_bytes=1024)
+    a = rng.standard_normal((64, 16)).astype(np.float32)
+    ds.save("m", {"arch": "t"}, {"trunk/W": a})
+    gen1 = ds.catalog.get_model("m").extra["save_gen"]
+    fp1 = ds.trunk_fingerprint("m")
+    refs1 = _page_refs(ds)
+    # re-save different content under the same id
+    b = rng.standard_normal((64, 16)).astype(np.float32)
+    ds.save("m", {"arch": "t"}, {"trunk/W": b})
+    assert ds.catalog.get_model("m").extra["save_gen"] == gen1 + 1
+    assert ds.trunk_fingerprint("m") != fp1
+    refs2 = _page_refs(ds)
+    # old pages fully dereferenced, new ones at refcount 1
+    assert not (set(refs1) & set(refs2))
+    assert all(v == 1 for v in refs2.values())
+    removed, _freed = ds.vacuum()   # collects exactly the old content
+    assert removed == len(refs1)
+    assert np.array_equal(ds.load("m")[1]["trunk/W"], b)
+    # re-saving *identical* content dedups against itself: no growth
+    ds.save("m", {"arch": "t"}, {"trunk/W": b})
+    assert set(_page_refs(ds)) == set(refs2)
+    assert all(v == 1 for v in _page_refs(ds).values())
+    assert ds.vacuum() == (0, 0)
+
+
+def test_dedup_across_models_saves_bytes(tmp_path):
+    rng = np.random.default_rng(17)
+    trunk = rng.standard_normal((128, 32)).astype(np.float32)
+    ds = _store(tmp_path, dedup_pages=True, page_bytes=4096)
+    for k in range(3):
+        head = rng.standard_normal(32).astype(np.float32)
+        ds.save(f"zoo{k}", {"arch": "t"},
+                {"trunk/W": trunk, "head/w": head})
+    # 3 models, one physical trunk: dedup elided 2 full trunk writes
+    assert ds.stats.dedup_bytes_saved >= 2 * trunk.nbytes
+    assert ds.stats.dedup_pages >= 2 * (trunk.nbytes // 4096)
+    assert ds.disk_footprint() < 2 * sum(
+        ds.catalog.get_model(f"zoo{k}").param_count * 4 for k in range(3))
+    for k in range(3):
+        assert np.array_equal(ds.load(f"zoo{k}")[1]["trunk/W"], trunk)
+
+
+def test_delete_unknown_model_raises(tmp_path):
+    ds = _store(tmp_path)
+    with pytest.raises(KeyError):
+        ds.delete("nope")
+
+
+def test_stats_gauges_flow_through_store(tmp_path):
+    rng = np.random.default_rng(19)
+    trunk = rng.standard_normal((64, 16)).astype(np.float32)
+    ds = _store(tmp_path, compress_deltas=True, dedup_pages=True,
+                page_bytes=2048)
+    ds.save("base", {"arch": "t"}, {"trunk/W": trunk})
+    ds.save("ft", {"arch": "t"},
+            {"trunk/W": trunk + rng.standard_normal(
+                trunk.shape).astype(np.float32) * 0.01},
+            base_model="base")
+    ds.save("twin", {"arch": "t"}, {"trunk/W": trunk})
+    assert ds.stats.compressed_delta_bytes > 0
+    assert ds.stats.dedup_pages > 0
+    assert ds.stats.dedup_bytes_saved > 0
+    assert ds.stats.quant_error_bound == max(
+        li.bound for li in ds.catalog.get_layers("ft"))
